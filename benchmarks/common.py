@@ -1,0 +1,33 @@
+"""Shared benchmark helpers.  Output convention (per scaffold):
+``name,us_per_call,derived`` CSV rows; `us_per_call` is virtual-time per
+task (µs) for simulator benchmarks, wall µs for real execution."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (HomogeneousScheduler, KernelType,
+                        PerformanceBasedScheduler)
+from repro.sim import XiTAOSim
+
+
+def row(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def run_pair(platform, dag_factory, seeds=range(5), num_cores=None,
+             force_noncritical=False):
+    """(homogeneous, performance-based) mean throughputs."""
+    layout = platform.layout()
+    hom, perf = [], []
+    for s in seeds:
+        hom.append(XiTAOSim(platform, HomogeneousScheduler(layout), seed=s,
+                            num_cores=num_cores,
+                            force_noncritical=force_noncritical)
+                   .run(dag_factory(s)).throughput)
+        perf.append(XiTAOSim(platform,
+                             PerformanceBasedScheduler(layout, 4), seed=s,
+                             num_cores=num_cores,
+                             force_noncritical=force_noncritical)
+                    .run(dag_factory(s)).throughput)
+    return float(np.mean(hom)), float(np.mean(perf))

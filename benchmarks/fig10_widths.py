@@ -1,0 +1,29 @@
+"""Paper Fig. 10: distribution of PTT-chosen TAO widths for VGG-16 (paper @8
+threads: 67% width-1, 30% width-8)."""
+
+from __future__ import annotations
+
+from repro.core import PerformanceBasedScheduler
+from repro.sim import XiTAOSim, haswell_2650v3
+from repro.sim.platform import restrict_platform
+from repro.sim.vgg16 import VGGConfig, vgg16_dag
+
+from .common import row
+
+
+def main(quick: bool = False) -> None:
+    for nthreads in (8,) if quick else (8, 20):
+        p = restrict_platform(haswell_2650v3(), nthreads)
+        pol = PerformanceBasedScheduler(p.layout(), 4)
+        res = XiTAOSim(p, pol, seed=0, force_noncritical=True).run(
+            vgg16_dag(VGGConfig()))
+        h = res.width_histogram()
+        total = sum(h.values())
+        dist = ";".join(f"w{w}={100*c/total:.0f}%"
+                        for w, c in sorted(h.items()))
+        row(f"fig10_widths_threads{nthreads}", 1e6 * res.makespan / total,
+            dist + (";paper=w1:67%,w8:30%" if nthreads == 8 else ""))
+
+
+if __name__ == "__main__":
+    main()

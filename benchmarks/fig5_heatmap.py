@@ -1,0 +1,37 @@
+"""Paper Fig. 5: throughput heatmap over (#tasks x parallelism), both
+schedulers, random mixed-kernel DAGs on the Jetson TX2 model."""
+
+from __future__ import annotations
+
+from repro.core import KernelType, RandomDAGConfig, generate_random_dag
+from repro.sim import jetson_tx2
+
+from .common import row, run_pair
+
+K = KernelType
+
+
+def _dag(s, n, width):
+    per = max(1, n // 3)
+    return generate_random_dag(RandomDAGConfig(
+        tasks_per_kernel={K.MATMUL: per, K.SORT: per, K.COPY: per},
+        avg_width=width, edge_rate=2.0, seed=s))
+
+
+def main(quick: bool = False) -> None:
+    tx2 = jetson_tx2()
+    tasks = (250, 1000) if quick else (250, 1000, 4000)
+    pars = (1, 4, 16)
+    for n in tasks:
+        for w in pars:
+            seeds = range(2 if quick or n >= 4000 else 4)
+            hom, perf = run_pair(tx2, lambda s, n=n, w=w: _dag(s, n, w),
+                                 seeds=seeds)
+            row(f"fig5_hm_tasks{n}_par{w}_homog", 1e6 / hom,
+                f"thpt={hom:.3f}")
+            row(f"fig5_hm_tasks{n}_par{w}_perf", 1e6 / perf,
+                f"thpt={perf:.3f};speedup={perf/hom:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Fig. 6: per-kernel throughput vs parallelism, both schedulers."""
+
+from __future__ import annotations
+
+from repro.core import KernelType, RandomDAGConfig, generate_random_dag
+from repro.sim import jetson_tx2
+
+from .common import row, run_pair
+
+K = KernelType
+
+
+def _dag(s, kernel, width, n=600):
+    return generate_random_dag(RandomDAGConfig(
+        tasks_per_kernel={kernel: n}, avg_width=width, edge_rate=2.0, seed=s))
+
+
+def main(quick: bool = False) -> None:
+    tx2 = jetson_tx2()
+    widths = (1, 4, 16) if quick else (1, 2, 4, 8, 16)
+    for kernel in (K.MATMUL, K.SORT, K.COPY):
+        for w in widths:
+            hom, perf = run_pair(
+                tx2, lambda s, k=kernel, w=w: _dag(s, k, w),
+                seeds=range(2 if quick else 4))
+            row(f"fig6_{kernel.name.lower()}_par{w}", 1e6 / perf,
+                f"thpt_perf={perf:.3f};thpt_homog={hom:.3f};"
+                f"speedup={perf/hom:.2f}")
+
+
+if __name__ == "__main__":
+    main()

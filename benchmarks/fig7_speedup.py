@@ -1,0 +1,41 @@
+"""Paper Fig. 7: speedup of the performance-based scheduler over the
+homogeneous scheduler at parallelism 1 (chains).  Paper values:
+matmul 3.3x, sort 2.5x, copy 2.2x, mix 2.7x."""
+
+from __future__ import annotations
+
+from repro.core import (KernelType, RandomDAGConfig, chain_dag,
+                        generate_random_dag)
+from repro.sim import jetson_tx2
+
+from .common import row, run_pair
+
+K = KernelType
+PAPER = {"matmul": 3.3, "sort": 2.5, "copy": 2.2, "mix": 2.7}
+
+
+def main(quick: bool = False) -> None:
+    tx2 = jetson_tx2()
+    n = 300 if quick else 600
+    seeds = range(3 if quick else 8)
+    for kernel in (K.MATMUL, K.SORT, K.COPY):
+        hom, perf = run_pair(tx2, lambda s, k=kernel: chain_dag(k, n),
+                             seeds=seeds)
+        name = kernel.name.lower()
+        row(f"fig7_{name}_par1", 1e6 / perf,
+            f"speedup={perf/hom:.2f};paper={PAPER[name]}")
+
+    def mix(s):
+        # a true parallelism-1 chain of alternating kernels
+        dag = chain_dag(K.MATMUL, n)
+        kinds = (K.MATMUL, K.SORT, K.COPY)
+        for node in dag.nodes:
+            node.kernel = kinds[node.nid % 3]
+        return dag
+    hom, perf = run_pair(tx2, mix, seeds=seeds)
+    row("fig7_mix_par1", 1e6 / perf,
+        f"speedup={perf/hom:.2f};paper={PAPER['mix']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Fig. 9: VGG-16 strong scaling on the Haswell model (paper: 0.69
+parallel efficiency at 20 threads)."""
+
+from __future__ import annotations
+
+from repro.core import PerformanceBasedScheduler
+from repro.sim import XiTAOSim, haswell_2650v3
+from repro.sim.platform import restrict_platform
+from repro.sim.vgg16 import VGGConfig, vgg16_dag
+
+from .common import row
+
+
+def main(quick: bool = False) -> None:
+    hw = haswell_2650v3()
+    threads = (1, 8, 20) if quick else (1, 2, 4, 8, 16, 20)
+    t1 = None
+    for nthreads in threads:
+        p = restrict_platform(hw, nthreads)
+        pol = PerformanceBasedScheduler(p.layout(), 4)
+        res = XiTAOSim(p, pol, seed=0, force_noncritical=True).run(
+            vgg16_dag(VGGConfig()))
+        if t1 is None:
+            t1 = res.makespan
+        eff = t1 / (nthreads * res.makespan)
+        extra = ";paper_eff=0.69" if nthreads == 20 else ""
+        row(f"fig9_vgg_threads{nthreads}", 1e6 * res.makespan,
+            f"time={res.makespan:.2f};eff={eff:.2f}{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Kernel micro-bench: interpret-mode correctness deltas vs oracles and
+jnp-oracle wall timings (TPU wall-times require hardware; the roofline for
+the kernels comes from the dry-run analysis)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitonic_sort.kernel import sort_rows_pallas
+from repro.kernels.bitonic_sort.ref import sort_rows_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.matmul.kernel import matmul_pallas
+from repro.kernels.matmul.ref import matmul_ref
+
+from .common import row
+
+
+def _time(f, *args, reps=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(quick: bool = False) -> None:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    out = matmul_pallas(x, y, block_m=128, block_n=128, block_k=128,
+                        interpret=True)
+    err = float(jnp.abs(out - matmul_ref(x, y)).max())
+    us = _time(jax.jit(matmul_ref), x, y)
+    row("kernel_matmul_256", us, f"interpret_err={err:.2e}")
+
+    q = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                 block_k=64, interpret=True)
+    err = float(jnp.abs(out - attention_ref(q, k, v, causal=True)).max())
+    us = _time(jax.jit(lambda q, k, v: attention_ref(q, k, v)), q, k, v)
+    row("kernel_flashattn_128", us, f"interpret_err={err:.2e}")
+
+    s = jnp.asarray(rng.standard_normal((8, 512)), jnp.float32)
+    out = sort_rows_pallas(s, block_rows=4, interpret=True)
+    err = float(jnp.abs(out - sort_rows_ref(s)).max())
+    us = _time(jax.jit(sort_rows_ref), s)
+    row("kernel_bitonic_8x512", us, f"interpret_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

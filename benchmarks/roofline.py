@@ -1,0 +1,55 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline source).
+
+Reads artifacts/dryrun/*.json and prints one row per (arch x shape x mesh):
+the three terms, the dominant bottleneck, usefulness ratio and the roofline
+fraction.  Run the grid first:  bash scripts_run_dryrun.sh
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import row
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_all() -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main(quick: bool = False) -> None:
+    recs = load_all()
+    if not recs:
+        row("roofline_missing", 0.0, "run scripts_run_dryrun.sh first")
+        return
+    n_ok = n_skip = n_fail = 0
+    for r in recs:
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            row(name, 0.0, f"SKIPPED:{r['reason']}")
+            continue
+        if r["status"] != "ok":
+            n_fail += 1
+            row(name, 0.0, f"FAILED:{r.get('error','?')[:80]}")
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        row(name, 1e6 * rf["step_time"],
+            f"dom={rf['dominant']};t_comp={rf['t_compute']:.4f};"
+            f"t_mem={rf['t_memory']:.4f};t_coll={rf['t_collective']:.4f};"
+            f"useful={rf['useful_flops_ratio']:.3f};"
+            f"frac={rf['roofline_fraction']:.3f};"
+            f"mem_GiB={r['memory']['peak_bytes']/2**30:.1f}")
+    row("roofline_summary", 0.0, f"ok={n_ok};skipped={n_skip};failed={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure + beyond-paper
+pod-scale benchmarks + the roofline table.  Prints name,us_per_call,derived
+CSV (see common.row).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (fig5_heatmap, fig6_kernels, fig7_speedup, fig8_interference,
+               fig9_vgg_scaling, fig10_widths, kernel_bench, pod_serving,
+               pod_straggler, roofline)
+
+MODULES = (
+    ("fig5_heatmap", fig5_heatmap),
+    ("fig6_kernels", fig6_kernels),
+    ("fig7_speedup", fig7_speedup),
+    ("fig8_interference", fig8_interference),
+    ("fig9_vgg_scaling", fig9_vgg_scaling),
+    ("fig10_widths", fig10_widths),
+    ("kernel_bench", kernel_bench),
+    ("pod_serving", pod_serving),
+    ("pod_straggler", pod_straggler),
+    ("roofline", roofline),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod.main(quick=args.quick)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Sharded, compressed, reshardable checkpoints.
+
+Layout: ``<dir>/step_<n>/{manifest.json, shard_<k>.msgpack.zst}``
+
+* Leaves are grouped into `n_shards` files by stable hash of their tree path
+  (on a real cluster: one shard set per host group, written in parallel).
+* The manifest records step, leaf -> (shard, dtype, shape) and extra user
+  state (data-pipeline position, mesh descriptor), enabling restore onto a
+  *different* mesh: arrays are materialized host-side and re-placed with the
+  target sharding (elastic restart).
+* ``AsyncCheckpointer`` snapshots device arrays to host, then serializes and
+  writes on a background thread — the train loop is blocked only for the
+  device->host copy.
+* Atomicity: shards are written to a tmp dir, manifest last, then renamed.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+import jax
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def _shard_of(path: str, n_shards: int) -> int:
+    return int(hashlib.sha1(path.encode()).hexdigest(), 16) % n_shards
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None,
+                    n_shards: int = 4) -> str:
+    paths, leaves, _ = _leaf_paths(tree)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    return _write(ckpt_dir, step, paths, host, extra or {}, n_shards)
+
+
+def _write(ckpt_dir: str, step: int, paths, host_leaves, extra: dict,
+           n_shards: int) -> str:
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    shards: dict[int, dict[str, dict]] = {k: {} for k in range(n_shards)}
+    index = {}
+    for path, arr in zip(paths, host_leaves):
+        k = _shard_of(path, n_shards)
+        shards[k][path] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                           "data": arr.tobytes()}
+        index[path] = {"shard": k, "dtype": str(arr.dtype),
+                       "shape": list(arr.shape)}
+    cctx = zstd.ZstdCompressor(level=3)
+    for k, blob in shards.items():
+        with open(os.path.join(tmp, f"shard_{k}.msgpack.zst"), "wb") as f:
+            f.write(cctx.compress(msgpack.packb(blob)))
+    manifest = {"step": step, "n_shards": n_shards, "index": index,
+                "extra": extra}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, step: int, target_tree,
+                    shardings=None) -> tuple:
+    """Restore into the structure of `target_tree`.  If `shardings` (a
+    matching pytree of jax.sharding.Sharding) is given, arrays are placed
+    with those shardings — this is the elastic-restart reshard path."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    dctx = zstd.ZstdDecompressor()
+    blobs = {}
+    for k in range(manifest["n_shards"]):
+        with open(os.path.join(d, f"shard_{k}.msgpack.zst"), "rb") as f:
+            blobs[k] = msgpack.unpackb(dctx.decompress(f.read()))
+    paths, leaves, treedef = _leaf_paths(target_tree)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    out = []
+    for path, ref, shd in zip(paths, leaves, shard_leaves):
+        meta = manifest["index"].get(path)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {path!r}")
+        raw = blobs[meta["shard"]][path]
+        arr = np.frombuffer(raw["data"], dtype=raw["dtype"]).reshape(
+            raw["shape"])
+        if list(arr.shape) != list(ref.shape):
+            raise ValueError(f"shape mismatch for {path}: "
+                             f"{arr.shape} vs {ref.shape}")
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Snapshot-then-write-in-background checkpointing."""
+
+    def __init__(self, ckpt_dir: str, n_shards: int = 4, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.n_shards = n_shards
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree, extra: dict | None = None) -> None:
+        self.wait()                                   # one in flight
+        paths, leaves, _ = _leaf_paths(tree)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]  # snapshot
+
+        def work():
+            _write(self.ckpt_dir, step, paths, host, extra or {},
+                   self.n_shards)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.ckpt_dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,5 @@
+from .base import SHAPES, ModelConfig, input_specs, shape_skip_reason
+from .registry import ARCH_IDS, get_config
+
+__all__ = ["SHAPES", "ModelConfig", "input_specs", "shape_skip_reason",
+           "ARCH_IDS", "get_config"]

@@ -1,0 +1,201 @@
+"""Performance Trace Table (PTT) — the paper's primary data structure.
+
+The PTT is an online latency model indexed by (leader core, resource width)
+per task *type*.  Entries start at 0.0 ("zero predicted time"), which makes
+untrained configurations globally optimal until visited, guaranteeing that
+every valid (core, width) pair is eventually trained (paper §3.2).  Updates
+use an exponential moving average at weight 1:4:
+
+    updated = (4 * old + new) / 5        # 80% history, 20% new sample
+
+and are performed only by the task's *leader* core, which keeps each row
+local to one core (the paper's cache-line layout; here: one C-contiguous
+numpy row per (type, core), padded to 64 bytes).
+
+Two implementations live here:
+
+* :class:`PTT` — the runtime table used by the schedulers/simulator, aware of
+  the cluster layout (valid (leader, width) pairs never straddle an LLC
+  cluster).
+* pure-JAX functional ops (:func:`ptt_update`, :func:`ptt_global_search`,
+  :func:`ptt_local_search`) — the same math as jit/vmap-able primitives for
+  the pod-scale elastic runtime (homogeneous device groups, power-of-two
+  widths), so placement decisions can be folded into compiled code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .places import ClusterLayout, Place
+
+# EMA weight from the paper: old:new = 4:1.
+EMA_OLD = 4.0
+EMA_DEN = 5.0
+
+# Pad each (type, core) row to a multiple of 8 float64 = 64 bytes — the
+# paper's "organized to fit into cache lines" layout.
+_LANE = 8
+
+
+def _ema(old: float, new: float) -> float:
+    return (EMA_OLD * old + new) / EMA_DEN
+
+
+@dataclasses.dataclass(frozen=True)
+class PTTConfig:
+    layout: ClusterLayout
+    num_task_types: int
+
+    @property
+    def num_cores(self) -> int:
+        return self.layout.num_cores
+
+    @property
+    def widths(self) -> tuple[int, ...]:
+        return self.layout.widths()
+
+
+class PTT:
+    """Runtime Performance Trace Table.
+
+    ``table[t][c, wi]`` is the EMA'd execution time of task type ``t``
+    launched with leader ``c`` at width ``widths[wi]``; 0.0 = untrained.
+    Invalid (leader, width) combinations (non-divisor width, misaligned
+    leader, cluster-straddling) are masked out of every search.
+    The entry count per cluster of N cores is 2N-1 for power-of-two N
+    (paper §3.3 overhead argument).
+    """
+
+    def __init__(self, cfg: PTTConfig):
+        self.cfg = cfg
+        widths = cfg.widths
+        self._w2i = {w: i for i, w in enumerate(widths)}
+        nw = len(widths)
+        padded = ((nw + _LANE - 1) // _LANE) * _LANE
+        self._tab = np.zeros((cfg.num_task_types, cfg.num_cores, padded),
+                             dtype=np.float64)
+        self._nw = nw
+        self._places = cfg.layout.valid_places()
+        self.updates = 0
+
+    # -- views ------------------------------------------------------------
+    @property
+    def widths(self) -> tuple[int, ...]:
+        return self.cfg.widths
+
+    @property
+    def places(self) -> tuple[Place, ...]:
+        return self._places
+
+    def value(self, task_type: int, core: int, width: int) -> float:
+        return float(self._tab[task_type, core, self._w2i[width]])
+
+    def table(self, task_type: int) -> np.ndarray:
+        return self._tab[task_type, :, : self._nw]
+
+    # -- update (leader core only; paper §3.2) -----------------------------
+    def update(self, task_type: int, leader: int, width: int,
+               elapsed: float) -> None:
+        wi = self._w2i[width]
+        old = self._tab[task_type, leader, wi]
+        # An untrained entry adopts the first sample directly; EMA from zero
+        # would take ~10 samples to converge while the entry no longer reads
+        # as "untrained".
+        self._tab[task_type, leader, wi] = (
+            elapsed if old == 0.0 else _ema(old, elapsed))
+        self.updates += 1
+
+    # -- searches (paper §3.3) ---------------------------------------------
+    def global_search(self, task_type: int, metric: str = "occupancy") -> Place:
+        """Best valid (leader, width) minimizing the objective.  Untrained
+        entries score 0 -> visited first (bootstrap).
+
+        metric="occupancy": exec_time * width (the paper's default — minimum
+        resource occupation).  metric="latency": exec_time alone (paper §3.3
+        notes alternative objectives are possible; TTFT-critical serving uses
+        this — queue-inflated samples push the search to narrower widths
+        under load, so width adapts to load automatically)."""
+        tab = self._tab[task_type]
+        best, best_cost = None, math.inf
+        for p in self._places:
+            cost = tab[p.leader, self._w2i[p.width]]
+            if metric == "occupancy":
+                cost = cost * p.width
+            if cost < best_cost:
+                best, best_cost = p, cost
+        assert best is not None
+        return best
+
+    def local_search(self, task_type: int, core: int) -> Place:
+        """Best width keeping the task in partitions containing ``core``
+        (non-critical tasks: avoid migration, only avoid oversubscription)."""
+        tab = self._tab[task_type]
+        cl = self.cfg.layout
+        best, best_cost = None, math.inf
+        for w in cl.widths():
+            try:
+                p = cl.place_of(core, w)
+            except ValueError:
+                continue
+            if core not in p:
+                continue
+            cost = tab[p.leader, self._w2i[p.width]] * p.width
+            if cost < best_cost:
+                best, best_cost = p, cost
+        assert best is not None
+        return best
+
+    def snapshot(self) -> np.ndarray:
+        return self._tab[:, :, : self._nw].copy()
+
+
+# ---------------------------------------------------------------------------
+# Pure-JAX functional PTT — same math, jit/vmap-able; homogeneous device
+# groups with power-of-two widths (the pod-scale case).
+# ---------------------------------------------------------------------------
+
+def make_ptt_array(num_task_types: int, num_cores: int,
+                   widths: Sequence[int]) -> jnp.ndarray:
+    return jnp.zeros((num_task_types, num_cores, len(widths)), jnp.float32)
+
+
+def _valid_mask(num_cores: int, widths: tuple[int, ...]) -> jnp.ndarray:
+    cores = np.arange(num_cores)[:, None]
+    ws = np.array(widths)[None, :]
+    return jnp.asarray((cores % ws) == 0)        # (C, W) bool
+
+
+def ptt_update(table: jnp.ndarray, task_type, leader, width_idx,
+               elapsed) -> jnp.ndarray:
+    """Functional EMA update (leader-core rule is the caller's contract)."""
+    old = table[task_type, leader, width_idx]
+    new = jnp.where(old == 0.0, elapsed, (EMA_OLD * old + elapsed) / EMA_DEN)
+    return table.at[task_type, leader, width_idx].set(new)
+
+
+def ptt_global_search(table: jnp.ndarray, task_type,
+                      widths: tuple[int, ...]):
+    """argmin_{leader,width} time*width with leader-validity mask.
+    Returns (leader, width_idx)."""
+    tab = table[task_type]                              # (C, W)
+    w = jnp.asarray(widths, tab.dtype)[None, :]
+    cost = jnp.where(_valid_mask(tab.shape[0], widths), tab * w, jnp.inf)
+    flat = jnp.argmin(cost.reshape(-1))
+    return flat // len(widths), flat % len(widths)
+
+
+def ptt_local_search(table: jnp.ndarray, task_type, core,
+                     widths: tuple[int, ...]):
+    """Best width_idx among the partitions containing ``core``."""
+    ws = jnp.asarray(widths, jnp.int32)
+    leaders = (core // ws) * ws                         # (W,)
+    vals = table[task_type, leaders, jnp.arange(len(widths))]
+    cost = vals * jnp.asarray(widths, table.dtype)
+    return jnp.argmin(cost)

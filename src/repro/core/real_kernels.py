@@ -1,0 +1,73 @@
+"""Real executions of the paper's three kernels (§4.2.1) for the threaded
+runtime: moldable bodies `f(chunk_index, width)` splitting the work across
+the TAO's resource partition.
+
+Sizes default to the paper's (64x64 matmul, 262KB sort input, 16.8MB copy)
+but are parameterizable so tests stay fast.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .dag import KernelType
+from .runtime import TAOBody
+
+
+class KernelPool:
+    """Preallocated working sets, one slot per `data_slot` (the generator's
+    data-reuse memory step assigns slots; tasks sharing a slot reuse data)."""
+
+    def __init__(self, n_slots: int, mat_n: int = 64, sort_bytes: int = 262_144,
+                 copy_bytes: int = 16_800_000, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.mat_n = mat_n
+        self.mats = [rng.standard_normal((mat_n, mat_n)).astype(np.float32)
+                     for _ in range(max(1, n_slots))]
+        self.mat_out = [np.zeros((mat_n, mat_n), np.float32)
+                        for _ in range(max(1, n_slots))]
+        ns = sort_bytes // 4
+        self.sort_src = [rng.integers(0, 1 << 30, ns).astype(np.int32)
+                         for _ in range(max(1, n_slots))]
+        nc = copy_bytes // 4
+        self.copy_src = [rng.integers(0, 255, nc).astype(np.int32)
+                         for _ in range(max(1, n_slots))]
+        self.copy_dst = [np.empty(nc, np.int32) for _ in range(max(1, n_slots))]
+
+    def body(self, kernel: KernelType, slot: int) -> TAOBody:
+        slot = slot % len(self.mats)
+        if kernel in (KernelType.MATMUL, KernelType.GEMM):
+            a = self.mats[slot]
+            out = self.mat_out[slot]
+
+            def matmul(chunk: int, width: int) -> None:
+                n = a.shape[0]
+                lo, hi = chunk * n // width, (chunk + 1) * n // width
+                # threads write disjoint output rows, share the inputs
+                out[lo:hi] = a[lo:hi] @ a
+            return matmul
+
+        if kernel == KernelType.SORT:
+            src = self.sort_src[slot]
+
+            def sort(chunk: int, width: int) -> None:
+                n = len(src)
+                lo, hi = chunk * n // width, (chunk + 1) * n // width
+                part = np.sort(src[lo:hi])          # quicksort the chunk
+                if width > 1:                        # one merge level
+                    mid = len(part) // 2
+                    np.union1d(part[:mid], part[mid:])
+            return sort
+
+        src = self.copy_src[slot]
+        dst = self.copy_dst[slot]
+
+        def copy(chunk: int, width: int) -> None:
+            n = len(src)
+            lo, hi = chunk * n // width, (chunk + 1) * n // width
+            dst[lo:hi] = src[lo:hi]
+        return copy
+
+    def bodies_for_dag(self, dag) -> dict[int, TAOBody]:
+        return {n.nid: self.body(n.kernel, max(n.data_slot, 0))
+                for n in dag.nodes}

@@ -1,0 +1,5 @@
+from .sharding import (AxisRules, constrain, current_rules, logical_sharding,
+                       set_rules, spec_for, use_rules)
+
+__all__ = ["AxisRules", "constrain", "current_rules", "logical_sharding",
+           "set_rules", "spec_for", "use_rules"]

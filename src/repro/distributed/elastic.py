@@ -1,0 +1,177 @@
+"""PTT-driven elasticity at pod scale — the paper's scheduler applied to
+device groups (see DESIGN.md §3).
+
+Three mechanisms:
+
+* :class:`PodPTT` — a Performance Trace Table whose "cores" are device
+  groups (contiguous sub-slices of the `model`/`data` axes) and whose widths
+  are sharding widths.  Same EMA-1:4 math as :mod:`repro.core.ptt`.
+* :class:`StragglerRebalancer` — the paper's interference response (Fig. 8)
+  applied to synchronous data parallelism: per-group step latencies update
+  the PTT; microbatch allocation shifts toward fast groups so the gradient
+  all-reduce stops being gated by the straggler.
+* :class:`HeartbeatMonitor` + :func:`elastic_remesh` — fault tolerance: a
+  group whose PTT row stops updating is declared dead; training re-meshes to
+  the survivors and restores from the checkpoint manifest (the deterministic
+  data pipeline replays from the recorded step).
+
+`RooflineLatencyModel` seeds simulated group latencies from dry-run roofline
+artifacts so pod-scale scheduling decisions are driven by the compiled
+model's own cost structure (this container has one real device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+import jax
+
+from ..core.places import ClusterLayout, homogeneous_layout
+from ..core.ptt import PTT, PTTConfig
+
+
+# ---------------------------------------------------------------------------
+# latency model seeded from dry-run artifacts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RooflineLatencyModel:
+    """t(width) = t_fixed + t_scale / width + t_coll * (width-1)/width,
+    anchored at the dry-run mesh width.  Compute+memory terms scale down
+    with width (more chips per replica); the collective term grows toward
+    its ring asymptote."""
+
+    t_scale: float
+    t_fixed: float
+    t_coll: float
+    anchor_width: int
+
+    @classmethod
+    def from_artifact(cls, path: str) -> "RooflineLatencyModel":
+        with open(path) as f:
+            rec = json.load(f)
+        r = rec["roofline"]
+        w0 = 16
+        return cls(t_scale=(r["t_compute"] + r["t_memory"]) * w0,
+                   t_fixed=0.0, t_coll=r["t_collective"] /
+                   max(1e-9, (w0 - 1) / w0), anchor_width=w0)
+
+    def latency(self, width: int) -> float:
+        w = max(1, width)
+        return self.t_fixed + self.t_scale / w + self.t_coll * (w - 1) / w
+
+
+# ---------------------------------------------------------------------------
+# pod-scale PTT
+# ---------------------------------------------------------------------------
+
+class PodPTT:
+    """PTT over device groups.  Task types index request/step classes
+    (e.g. prefill length buckets, decode, train-microbatch)."""
+
+    def __init__(self, num_groups: int, num_task_types: int):
+        layout = homogeneous_layout(num_groups)
+        self.ptt = PTT(PTTConfig(layout=layout, num_task_types=num_task_types))
+        self.layout = layout
+        self.last_update = np.zeros(num_groups)
+
+    def record(self, task_type: int, leader: int, width: int, elapsed: float,
+               now: float) -> None:
+        self.ptt.update(task_type, leader, width, elapsed)
+        self.last_update[leader:leader + width] = now
+
+    def place_critical(self, task_type: int, metric: str = "occupancy"):
+        return self.ptt.global_search(task_type, metric=metric)
+
+    def width_local(self, task_type: int, group: int):
+        return self.ptt.local_search(task_type, group)
+
+
+# ---------------------------------------------------------------------------
+# straggler-aware data parallelism
+# ---------------------------------------------------------------------------
+
+class StragglerRebalancer:
+    """EMA-1:4 per-group step times -> proportional microbatch allocation.
+
+    With per-group time t_i for one microbatch, assigning n_i ~ 1/t_i
+    equalizes finish times; the allocation is recomputed only when the
+    predicted makespan improves by `hysteresis` (avoids thrashing on noise,
+    like the paper's EMA damping)."""
+
+    def __init__(self, n_groups: int, total_microbatches: int,
+                 hysteresis: float = 0.05):
+        self.n = n_groups
+        self.total = total_microbatches
+        self.hysteresis = hysteresis
+        self.t_ema = np.zeros(n_groups)          # 0 = untrained
+        self.alloc = self._even()
+
+    def _even(self) -> np.ndarray:
+        base = self.total // self.n
+        alloc = np.full(self.n, base)
+        alloc[: self.total - base * self.n] += 1
+        return alloc
+
+    def observe(self, group_times: np.ndarray) -> None:
+        """group_times: wall time of each group's current allocation."""
+        per_mb = group_times / np.maximum(self.alloc, 1)
+        untrained = self.t_ema == 0
+        self.t_ema = np.where(untrained, per_mb,
+                              (4 * self.t_ema + per_mb) / 5)
+
+    def makespan(self, alloc: np.ndarray) -> float:
+        return float(np.max(alloc * self.t_ema))
+
+    def rebalance(self) -> np.ndarray:
+        if np.any(self.t_ema == 0):
+            return self.alloc
+        speed = 1.0 / self.t_ema
+        ideal = speed / speed.sum() * self.total
+        alloc = np.maximum(1, np.floor(ideal)).astype(int)
+        # distribute the remainder to the fastest finishers
+        while alloc.sum() < self.total:
+            finish = (alloc + 1) * self.t_ema
+            alloc[np.argmin(finish)] += 1
+        while alloc.sum() > self.total:
+            finish = alloc * self.t_ema
+            alloc[np.argmax(finish)] -= 1
+        if self.makespan(alloc) < self.makespan(self.alloc) * (
+                1 - self.hysteresis):
+            self.alloc = alloc
+        return self.alloc
+
+
+# ---------------------------------------------------------------------------
+# failure detection + elastic re-mesh
+# ---------------------------------------------------------------------------
+
+class HeartbeatMonitor:
+    def __init__(self, n_groups: int, timeout: float):
+        self.timeout = timeout
+        self.last = np.zeros(n_groups)
+        self.dead: set[int] = set()
+
+    def beat(self, group: int, now: float) -> None:
+        self.last[group] = now
+
+    def check(self, now: float) -> set[int]:
+        for g in range(len(self.last)):
+            if g not in self.dead and now - self.last[g] > self.timeout:
+                self.dead.add(g)
+        return self.dead
+
+
+def elastic_remesh(tree, shardings_fn, new_mesh):
+    """Re-place a pytree of arrays onto a new (smaller/larger) mesh.
+    `shardings_fn(mesh)` returns the matching sharding pytree."""
+    new_sh = shardings_fn(new_mesh)
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    flat_sh = jax.tree_util.tree_flatten(new_sh)[0]
+    out = [jax.device_put(np.asarray(jax.device_get(x)), s)
+           for x, s in zip(flat, flat_sh)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,157 @@
+"""Post-optimization HLO analysis: collective-byte accounting.
+
+``compiled.cost_analysis()`` has FLOPs and memory traffic but no collective
+costs, so we parse ``compiled.as_text()``: for every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute we sum *operand* bytes
+(resolved through a per-computation name->shape table) and derive per-device
+wire bytes with ring formulas.  Collectives whose replica groups span pod
+boundaries (device-id stride >= devices-per-pod) are classified as DCN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\(?[^)=]*?\)?)\s*([\w\-]+)\(")
+_COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?$")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one shape or tuple-of-shapes string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    operand_bytes: int      # per device, summed over operands
+    result_bytes: int
+    group_size: int
+    cross_pod: bool
+
+    def wire_bytes(self) -> float:
+        """Per-device bytes on the wire (ring algorithms)."""
+        g = max(self.group_size, 1)
+        frac = (g - 1) / g
+        if self.kind == "all-reduce":
+            return 2.0 * self.operand_bytes * frac
+        if self.kind == "all-gather":
+            return self.result_bytes * frac
+        if self.kind == "reduce-scatter":
+            return self.operand_bytes * frac
+        if self.kind == "all-to-all":
+            return self.operand_bytes * frac
+        return float(self.operand_bytes)      # collective-permute
+
+
+@dataclasses.dataclass
+class CollectiveSummary:
+    ops: list[CollectiveOp]
+
+    def total_operand_bytes(self) -> int:
+        return sum(o.operand_bytes for o in self.ops)
+
+    def wire_bytes(self, cross_pod: bool | None = None) -> float:
+        return sum(o.wire_bytes() for o in self.ops
+                   if cross_pod is None or o.cross_pod == cross_pod)
+
+    def by_kind(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for o in self.ops:
+            out[o.kind] = out.get(o.kind, 0) + o.operand_bytes
+        return out
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for o in self.ops:
+            out[o.kind] = out.get(o.kind, 0) + 1
+        return out
+
+
+def parse_collectives(hlo_text: str,
+                      devices_per_pod: int | None = None) -> CollectiveSummary:
+    ops: list[CollectiveOp] = []
+    shapes: dict[str, str] = {}          # per-computation name -> type str
+    pending: list[tuple[str, str, str, str]] = []
+
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ("%" in stripped or
+                                       stripped.startswith("ENTRY")):
+            shapes = {}
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+        shapes[name] = type_str
+        cm = _COLL_RE.match(opcode)
+        if not cm:
+            continue
+        kind = cm.group(1)
+        # group size
+        gsize = 1
+        gi = _GROUPS_IOTA_RE.search(line)
+        cross = False
+        if gi:
+            gsize = int(gi.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                members = [int(x) for x in gl.group(1).split(",") if x.strip()]
+                gsize = len(members)
+                if devices_per_pod and members:
+                    pods = {mm // devices_per_pod for mm in members}
+                    cross = len(pods) > 1
+        if gi and devices_per_pod:
+            # iota groups [n, g]<=[N] (optionally transposed): a group is
+            # contiguous ids when the trailing tile matches; conservatively
+            # mark cross-pod if the whole op spans more than one pod and the
+            # group count x size exceeds one pod
+            n_groups = int(gi.group(1))
+            cross = (n_groups * gsize > devices_per_pod
+                     and "T(" in line) or gsize > devices_per_pod
+        # operand bytes resolved through the shape table
+        om = _OPERANDS_RE.search(line[m.end() - 1:])
+        operand_bytes = 0
+        if om:
+            for tok in om.group(1).split(","):
+                tok = tok.strip()
+                tm = re.match(r"(?:[a-z0-9]+\[[0-9,]*\]\{[^}]*\}\s+)?(%[\w.\-]+)", tok)
+                if tm and tm.group(1) in shapes:
+                    operand_bytes += _shape_bytes(shapes[tm.group(1)])
+                elif "[" in tok:
+                    operand_bytes += _shape_bytes(tok)
+        result_bytes = _shape_bytes(type_str)
+        if operand_bytes == 0:
+            # fall back: infer from result (same for all-reduce/permute)
+            operand_bytes = result_bytes
+            if kind == "all-gather" and gsize:
+                operand_bytes = result_bytes // gsize
+        ops.append(CollectiveOp(kind=kind, operand_bytes=operand_bytes,
+                                result_bytes=result_bytes, group_size=gsize,
+                                cross_pod=cross))
+    return CollectiveSummary(ops=ops)

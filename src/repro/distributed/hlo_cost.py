@@ -1,0 +1,477 @@
+"""Trip-count-aware HLO cost walker.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+undercounts scanned-layer models by ~L x.  The optimized HLO carries
+``backend_config={"known_trip_count":{"n":"L"}}`` on while ops, so we walk
+the module ourselves:
+
+* FLOPs: dot ops exactly (2 * prod(result) * contracted), elementwise /
+  transcendental ops at per-element costs; descends into fusions, calls and
+  while bodies (x trip count).
+* bytes: operand + result bytes of top-level instructions (fusions are one
+  kernel: internals don't touch HBM), x trip counts.
+* collectives: operand bytes and ring wire-bytes, x trip counts, classified
+  ICI vs cross-pod DCN by replica-group span.
+
+This is the dry-run "profile" that the roofline and the perf loop read.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from .hlo_analysis import _DTYPE_BYTES, _shape_bytes
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[\\":{ ]+n[\\": ]+(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_DIM_NUM_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+# per-element flop weights (roughly XLA's own accounting)
+_EW1 = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+        "negate", "abs", "compare", "select", "and", "or", "xor", "not",
+        "clamp", "floor", "ceil", "round-nearest-afz", "sign",
+        "shift-left", "shift-right-logical", "shift-right-arithmetic",
+        "remainder", "atan2", "power"}
+_EWT = {"exponential": 8, "log": 8, "rsqrt": 4, "sqrt": 4, "tanh": 12,
+        "logistic": 10, "sine": 8, "cosine": 8, "expm1": 8, "log1p": 8,
+        "erf": 10, "cbrt": 8, "exponential-minus-one": 8}
+_REDUCE_LIKE = {"reduce", "reduce-window"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for m in re.finditer(r"[a-z0-9]+\[([0-9,]*)\]", type_str):
+        n = 1
+        for d in m.group(1).split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_operand: float = 0.0
+    wire_ici: float = 0.0
+    wire_dcn: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    # bytes/flops attributed to named scopes (jax.named_scope tags), used by
+    # the perf loop to model Pallas-kernel substitution of a region
+    tag_bytes: dict = dataclasses.field(default_factory=dict)
+    tag_flops: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, o: "CostTotals", mult: float = 1.0) -> None:
+        self.flops += o.flops * mult
+        self.bytes += o.bytes * mult
+        self.coll_operand += o.coll_operand * mult
+        self.wire_ici += o.wire_ici * mult
+        self.wire_dcn += o.wire_dcn * mult
+        for k, v in o.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+        for d, od in (("tag_bytes", o.tag_bytes), ("tag_flops", o.tag_flops)):
+            mine = getattr(self, d)
+            for k, v in od.items():
+                mine[k] = mine.get(k, 0) + v * mult
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+class HLOModule:
+    def __init__(self, text: str, tags: tuple[str, ...] = ("flashattn",)):
+        self.tags = tags
+        self.comps: dict[str, list[Instr]] = {}
+        cur: list[Instr] | None = None
+        for line in text.splitlines():
+            # computation headers end with '{' and never contain ' = '
+            # (instruction lines always do; headers may contain '=' inside
+            # comments like /*index=5*/)
+            mc = _COMP_RE.match(line.strip())
+            if mc and " = " not in line:
+                cur = []
+                self.comps[mc.group(1)] = cur
+                continue
+            if line.strip() == "}":
+                continue
+            mi = _INSTR_RE.match(line)
+            if mi is not None and cur is not None:
+                cur.append(Instr(name=mi.group(1), type_str=mi.group(2),
+                                 opcode=mi.group(3), rest=mi.group(4)))
+        self.entry = self._find_entry(text)
+        self._memo: dict[tuple[str, bool], CostTotals] = {}
+        self._fusion_memo: dict[str, dict[int, float]] = {}
+
+    def _find_entry(self, text: str) -> str:
+        for line in text.splitlines():
+            if line.strip().startswith("ENTRY"):
+                m = _COMP_RE.match(line.strip())
+                if m:
+                    return m.group(1)
+        return next(iter(self.comps))
+
+    # -- per-instruction helpers -----------------------------------------
+    def _operand_sizes(self, instr: Instr, shapes: dict[str, str]) -> list[int]:
+        sizes = []
+        depth = 0
+        arg = ""
+        args = []
+        for ch in instr.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    args.append(arg)
+                    break
+                depth -= 1
+            elif ch == "," and depth == 0:
+                args.append(arg)
+                arg = ""
+                continue
+            arg += ch
+        for tok in args:
+            tok = tok.strip()
+            if not tok:
+                continue
+            m = re.match(r"(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?\s+)?(%[\w.\-]+)",
+                         tok)
+            if m and m.group(1) in shapes:
+                sizes.append(_shape_bytes(shapes[m.group(1)]))
+            elif "[" in tok:
+                sizes.append(_shape_bytes(tok))
+            else:
+                sizes.append(0)
+        return sizes
+
+    def _operand_bytes(self, instr: Instr, shapes: dict[str, str]) -> int:
+        return sum(self._operand_sizes(instr, shapes))
+
+    def _operand_names(self, instr: Instr) -> list[str | None]:
+        names = []
+        depth = 0
+        arg = ""
+        args = []
+        for ch in instr.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    args.append(arg)
+                    break
+                depth -= 1
+            elif ch == "," and depth == 0:
+                args.append(arg)
+                arg = ""
+                continue
+            arg += ch
+        for tok in args:
+            m = re.match(
+                r"\s*(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?\s+)?(%[\w.\-]+)",
+                tok)
+            names.append(m.group(1) if m else None)
+        return names
+
+    def _fusion_param_traffic(self, comp: str) -> dict[int, float]:
+        """Per-parameter effective HBM read bytes for a fused computation.
+
+        Fusion internals never touch HBM — only parameter loads and the root
+        write.  A parameter whose value (transitively, through element-wise
+        pass-throughs like convert/copy/bitcast/reshape) only ever feeds
+        * operand 0 of dynamic-slice / gather ops -> slice-result bytes, or
+        * operand 0 of a dynamic-update-slice (the in-place buffer; the
+          untouched elements alias through) -> the update's bytes,
+        contributes only that reduced traffic; anything else reads the full
+        parameter (-1 sentinel)."""
+        if comp in self._fusion_memo:
+            return self._fusion_memo[comp]
+        instrs = self.comps.get(comp, [])
+        param_idx: dict[str, int] = {}
+        for i in instrs:
+            if i.opcode == "parameter":
+                m = re.match(r"\s*(\d+)", i.rest)
+                if m:
+                    param_idx[i.name] = int(m.group(1))
+        shapes = {i.name: i.type_str for i in instrs}
+        # consumers[name] = list of (instr, operand_pos)
+        consumers: dict[str, list[tuple[Instr, int]]] = {}
+        operands: dict[str, list[str | None]] = {}
+        for i in instrs:
+            names = self._operand_names(i)
+            operands[i.name] = names
+            for pos, nm in enumerate(names):
+                if nm:
+                    consumers.setdefault(nm, []).append((i, pos))
+        passthrough = {"convert", "copy", "bitcast", "reshape"}
+        by_name = {i.name: i for i in instrs}
+
+        def classify(name: str, seen: frozenset) -> float:
+            """Return reduced traffic bytes for value `name`, or -1 if any
+            consumption path requires the full value."""
+            if name in seen:
+                return -1.0
+            if not consumers.get(name):
+                # `name` is the fusion root: a DUS root aliases its buffer
+                # (no extra traffic).  CPU float-normalization wraps bf16
+                # loop state in convert(DUS(convert(...))) chains; on the
+                # TPU target those are pure aliased DUS, so convert-chained
+                # DUS roots count as aliased too.  Anything else is a full
+                # materialized write -> full read of the source.
+                inst = by_name.get(name)
+                while inst is not None and inst.opcode in ("convert",
+                                                           "bitcast", "copy"):
+                    src = operands.get(inst.name, [None])[0]
+                    inst = by_name.get(src) if src else None
+                return 0.0 if (inst is not None
+                               and inst.opcode == "dynamic-update-slice") \
+                    else -1.0
+            total = 0.0
+            for instr, pos in consumers.get(name, []):
+                if instr.opcode in ("dynamic-slice", "gather") and pos == 0:
+                    total += _shape_bytes(instr.type_str)
+                elif instr.opcode == "dynamic-update-slice" and pos == 0:
+                    upd_nm = operands[instr.name][1] \
+                        if len(operands[instr.name]) > 1 else None
+                    total += (_shape_bytes(shapes.get(upd_nm, ""))
+                              if upd_nm else 0)
+                    # the DUS result must itself be slice-consumed or be the
+                    # root (aliased output)
+                    sub = classify(instr.name, seen | {name})
+                    if sub < 0:
+                        return -1.0
+                    total += sub
+                elif instr.opcode in passthrough:
+                    sub = classify(instr.name, seen | {name})
+                    if sub < 0:
+                        return -1.0
+                    total += sub
+                else:
+                    return -1.0
+            return total
+
+        traffic: dict[int, float] = {}
+        root = instrs[-1].name if instrs else None
+        for i in instrs:
+            if i.opcode != "parameter":
+                continue
+            idx = param_idx[i.name]
+            if not consumers.get(i.name):
+                traffic[idx] = 0.0
+                continue
+            big = _shape_bytes(i.type_str)
+            # the root value is written out anyway; treating the root as a
+            # free sink makes params that flow straight to the root count as
+            # full reads, which classify() handles by returning -1 for any
+            # non-slice consumer — except the fusion root DUS case where the
+            # output aliases the buffer.
+            r = classify(i.name, frozenset())
+            traffic[idx] = r if (r >= 0 and r < big) else -1.0
+        self._fusion_memo[comp] = traffic
+        return traffic
+
+    def _memory_bytes(self, instr: Instr, shapes: dict[str, str]) -> float:
+        """HBM traffic of one top-level kernel, in-place/slice aware."""
+        op = instr.opcode
+        result = _shape_bytes(instr.type_str)
+        ops = self._operand_sizes(instr, shapes)
+        if op in ("dynamic-slice", "gather"):
+            return 2.0 * result                    # read slice + write result
+        if op == "dynamic-update-slice":
+            upd = ops[1] if len(ops) > 1 else result
+            return 2.0 * upd                       # in-place update
+        if op == "scatter":
+            upd = ops[2] if len(ops) > 2 else result
+            return 2.0 * upd + (ops[1] if len(ops) > 1 else 0)
+        if op == "fusion":
+            callee = _CALLS_RE.search(instr.rest)
+            if callee:
+                traffic = self._fusion_param_traffic(callee.group(1))
+                total = 0.0
+                for i, sz in enumerate(ops):
+                    t = traffic.get(i, 0.0)     # unused params: no traffic
+                    total += sz if t < 0 else min(t, sz)
+                if self._root_is_dus(callee.group(1)):
+                    # result aliases the buffer; only the update is written
+                    written = sum(v for v in traffic.values() if v > 0)
+                    return total + min(written, result)
+                return total + result
+        return float(sum(ops) + result)
+
+    def _root_is_dus(self, comp: str) -> bool:
+        """Root is a dynamic-update-slice, possibly behind convert/copy
+        chains (CPU bf16 float-normalization artifacts; aliased on TPU)."""
+        instrs = self.comps.get(comp, [])
+        if not instrs:
+            return False
+        by_name = {i.name: i for i in instrs}
+        operands = {i.name: self._operand_names(i) for i in instrs}
+        inst = instrs[-1]
+        while inst is not None and inst.opcode in ("convert", "bitcast",
+                                                   "copy"):
+            src = operands.get(inst.name, [None])[0]
+            inst = by_name.get(src) if src else None
+        return inst is not None and inst.opcode == "dynamic-update-slice"
+
+    def _dot_flops(self, instr: Instr, shapes: dict[str, str]) -> float:
+        out_elems = _shape_elems(instr.type_str)
+        m = re.match(r"\s*(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?\s+)?(%[\w.\-]+)",
+                     instr.rest)
+        contracted = 1
+        if m and m.group(1) in shapes:
+            lhs_shape = shapes[m.group(1)]
+            dims = []
+            sm = re.search(r"\[([0-9,]*)\]", lhs_shape)
+            if sm:
+                dims = [int(d) for d in sm.group(1).split(",") if d]
+            cm = _DIM_NUM_RE.search(instr.rest)
+            if cm:
+                for ci in cm.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        contracted *= dims[int(ci)]
+        return 2.0 * out_elems * contracted
+
+    def _collective(self, instr: Instr, shapes: dict[str, str],
+                    devices_per_pod: int | None) -> tuple[float, float, float]:
+        kind = instr.opcode.replace("-start", "")
+        operand = self._operand_bytes(instr, shapes)
+        result = _shape_bytes(instr.type_str)
+        gsize, cross = 1, False
+        gi = _GROUPS_IOTA_RE.search(instr.rest)
+        if gi:
+            gsize = int(gi.group(2))
+            n_groups = int(gi.group(1))
+            if devices_per_pod:
+                cross = (gsize > devices_per_pod or
+                         ("T(" in instr.rest
+                          and n_groups * gsize > devices_per_pod))
+        else:
+            gl = _GROUPS_LIST_RE.search(instr.rest)
+            if gl:
+                members = [int(x) for x in gl.group(1).split(",") if x.strip()]
+                gsize = len(members)
+                if devices_per_pod and members:
+                    cross = len({mm // devices_per_pod for mm in members}) > 1
+        if operand == 0:
+            operand = result if kind != "all-gather" else result // max(gsize, 1)
+        frac = (gsize - 1) / max(gsize, 1)
+        if kind == "all-reduce":
+            wire = 2.0 * operand * frac
+        elif kind == "all-gather":
+            wire = result * frac
+        elif kind in ("reduce-scatter", "all-to-all"):
+            wire = operand * frac
+        else:
+            wire = float(operand)
+        return float(operand), wire, (1.0 if cross else 0.0)
+
+    # -- walk --------------------------------------------------------------
+    def cost(self, comp: str | None = None, inside_fusion: bool = False,
+             devices_per_pod: int | None = None) -> CostTotals:
+        comp = comp or self.entry
+        key = (comp, inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = CostTotals()
+        shapes = {i.name: i.type_str for i in self.comps.get(comp, [])}
+        for instr in self.comps.get(comp, []):
+            op = instr.opcode
+            elems = _shape_elems(instr.type_str)
+            if op == "dot":
+                total.flops += self._dot_flops(instr, shapes)
+            elif op in _EW1:
+                total.flops += elems
+            elif op in _EWT:
+                total.flops += elems * _EWT[op]
+            elif op in _REDUCE_LIKE:
+                total.flops += self._operand_bytes(instr, shapes) / 4.0
+            if op in _COLLECTIVES:
+                operand, wire, cross = self._collective(
+                    instr, shapes, devices_per_pod)
+                total.coll_operand += operand
+                if cross:
+                    total.wire_dcn += wire
+                else:
+                    total.wire_ici += wire
+                k = op.replace("-start", "")
+                total.coll_counts[k] = total.coll_counts.get(k, 0) + 1
+            # memory traffic: top-level kernels only
+            if not inside_fusion and op not in (
+                    "parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "while", "conditional", "call", "copy-start",
+                    "copy-done"):
+                b = self._memory_bytes(instr, shapes)
+                total.bytes += b
+                onm = _OPNAME_RE.search(instr.rest)
+                if onm:
+                    for tag in self.tags:
+                        if tag in onm.group(1):
+                            total.tag_bytes[tag] = (
+                                total.tag_bytes.get(tag, 0.0) + b)
+            if op == "dot":
+                onm = _OPNAME_RE.search(instr.rest)
+                if onm:
+                    for tag in self.tags:
+                        if tag in onm.group(1):
+                            total.tag_flops[tag] = (
+                                total.tag_flops.get(tag, 0.0)
+                                + self._dot_flops(instr, shapes))
+            # descend
+            if op == "while":
+                body = _CALLS_RE.search(instr.rest)
+                trip = 1
+                tm = _TRIP_RE.search(instr.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                if body:
+                    total.add(self.cost(body.group(1), inside_fusion,
+                                        devices_per_pod), trip)
+                cond = _COND_RE.search(instr.rest)
+                if cond and cond.group(1) != (body and body.group(1)):
+                    total.add(self.cost(cond.group(1), inside_fusion,
+                                        devices_per_pod), trip + 1)
+            elif op == "fusion":
+                callee = _CALLS_RE.search(instr.rest)
+                if callee:
+                    total.add(self.cost(callee.group(1), True,
+                                        devices_per_pod), 1.0)
+            elif op in ("call", "async-start", "custom-call"):
+                callee = _CALLS_RE.search(instr.rest)
+                if callee and callee.group(1) in self.comps:
+                    total.add(self.cost(callee.group(1), inside_fusion,
+                                        devices_per_pod), 1.0)
+            elif op == "conditional":
+                bm = _BRANCHES_RE.search(instr.rest)
+                if bm:
+                    branches = [b.strip() for b in bm.group(1).split(",")]
+                    costs = [self.cost(b, inside_fusion, devices_per_pod)
+                             for b in branches if b in self.comps]
+                    if costs:
+                        # worst case branch
+                        worst = max(costs, key=lambda c: c.flops)
+                        total.add(worst, 1.0)
+        self._memo[key] = total
+        return total
+
+
+def analyze(hlo_text: str, devices_per_pod: int | None = None) -> CostTotals:
+    return HLOModule(hlo_text).cost(devices_per_pod=devices_per_pod)

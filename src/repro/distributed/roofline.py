@@ -1,0 +1,160 @@
+"""Roofline model for TPU v5e targets.
+
+Terms (per device, from the compiled SPMD executable — cost_analysis() is
+already post-partitioning per-device):
+
+    compute    = HLO_FLOPs_dev / PEAK_FLOPS
+    memory     = HLO_bytes_dev / HBM_BW
+    collective = wire_bytes_ici / ICI_BW + wire_bytes_dcn / DCN_BW
+
+plus MODEL_FLOPS (6*N_active*tokens for training, 2*N_active*tokens for
+inference) and the usefulness ratio MODEL_FLOPS / (HLO_FLOPs_dev * chips).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..configs.base import SHAPES, ModelConfig
+from .hlo_analysis import CollectiveSummary
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (task-specified)
+DCN_BW = 6.25e9              # bytes/s per chip cross-pod (50 Gbps)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_dev: float
+    bytes_dev: float
+    coll_operand_bytes: float
+    wire_ici: float
+    wire_dcn: float
+    model_flops: float
+    peak_mem_bytes: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_ici / ICI_BW + self.wire_dcn / DCN_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step-time estimate: the dominant term bounds the step
+        (assuming perfect overlap of the other two)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total_hlo = self.flops_dev * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the hardware roofline achieved on *useful* model
+        FLOPs: useful_time_at_peak / bound_step_time."""
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        return t_useful / self.step_time if self.step_time else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_dev": self.flops_dev, "bytes_dev": self.bytes_dev,
+            "coll_operand_bytes": self.coll_operand_bytes,
+            "wire_ici": self.wire_ici, "wire_dcn": self.wire_dcn,
+            "model_flops": self.model_flops,
+            "peak_mem_bytes": self.peak_mem_bytes,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "step_time": self.step_time,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analytic_decode_bytes(cfg: ModelConfig, shape: str, chips: int) -> float:
+    """Per-device HBM bytes of one decode step under the canonical TPU
+    serving pattern: all (bf16) weights read once + the KV/SSM state read
+    once + a token-slice write.  The CPU-compiled module inflates this with
+    float-normalization copies and copy-insertion on the cache carry (see
+    EXPERIMENTS.md §Roofline notes); this is the TPU-target memory term."""
+    s = SHAPES[shape]
+    B, S = s["global_batch"], s["seq_len"]
+    params = cfg.param_count() * 2                    # bf16 serving weights
+    cache = 0.0
+    for layer in range(cfg.n_layers):
+        if cfg.family in ("ssm",) or (cfg.family == "hybrid"
+                                      and not cfg.is_attn_layer(layer)):
+            cache += (B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+                      * 4)                            # f32 SSM state
+            cache += B * (cfg.ssm_conv - 1) * (cfg.d_inner
+                                               + 2 * cfg.ssm_state) * 2
+        else:
+            cache += 2 * B * S * cfg.n_kv_heads * cfg.hd * 2   # K+V bf16
+    if cfg.family == "vlm":
+        nb = cfg.n_layers // cfg.cross_attn_every
+        cache += 2 * nb * B * cfg.n_image_tokens * cfg.n_kv_heads * cfg.hd * 2
+    return (params + cache) / chips
+
+
+def model_flops(cfg: ModelConfig, shape: str) -> float:
+    s = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if s["kind"] == "train":
+        tokens = s["global_batch"] * s["seq_len"]
+        return 6.0 * n_active * tokens
+    if s["kind"] == "prefill":
+        tokens = s["global_batch"] * s["seq_len"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * s["global_batch"]
+
+
+def build(arch: str, shape: str, mesh_name: str, chips: int,
+          cost: dict, coll: CollectiveSummary, cfg: ModelConfig,
+          peak_mem_bytes: int) -> Roofline:
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_dev=float(cost.get("flops", 0.0)),
+        bytes_dev=float(cost.get("bytes accessed", 0.0)),
+        coll_operand_bytes=float(coll.total_operand_bytes()),
+        wire_ici=coll.wire_bytes(cross_pod=False),
+        wire_dcn=coll.wire_bytes(cross_pod=True),
+        model_flops=model_flops(cfg, shape),
+        peak_mem_bytes=peak_mem_bytes)
+
+
+def build_from_walker(arch: str, shape: str, mesh_name: str, chips: int,
+                      totals, cfg: ModelConfig,
+                      peak_mem_bytes: int) -> Roofline:
+    """Roofline from the trip-count-aware HLO walker
+    (:mod:`repro.distributed.hlo_cost`)."""
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_dev=float(totals.flops),
+        bytes_dev=float(totals.bytes),
+        coll_operand_bytes=float(totals.coll_operand),
+        wire_ici=float(totals.wire_ici),
+        wire_dcn=float(totals.wire_dcn),
+        model_flops=model_flops(cfg, shape),
+        peak_mem_bytes=peak_mem_bytes)

@@ -1,0 +1,3 @@
+from .ops import sort_rows
+
+__all__ = ["sort_rows"]

@@ -1,0 +1,19 @@
+"""Public row-sort op."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import sort_rows_pallas
+from .ref import sort_rows_ref
+
+
+@partial(jax.jit, static_argnames=("block_rows", "force_pallas"))
+def sort_rows(x, *, block_rows: int = 8, force_pallas: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        return sort_rows_pallas(x, block_rows=block_rows,
+                                interpret=not on_tpu)
+    return sort_rows_ref(x)

@@ -1,0 +1,107 @@
+"""Flash attention (GQA, causal-aware) as a Pallas TPU kernel.
+
+Grid (B, Hq, nq, nk), k innermost.  Per (b, h, qi): the online-softmax state
+(m, l, acc) lives in VMEM scratch across the k sweep; the output tile is
+written once at the last k step.  GQA is folded into the K/V index_map
+(h -> h // rep), so no KV head replication ever hits HBM.  Fully-masked
+causal tiles are skipped with pl.when — this kernel does the triangular-
+schedule flop skipping that the pure-jnp oracle cannot.
+
+VMEM per step: q (bq,hd) + k,v (bk,hd) + scores (bq,bk) f32 + acc (bq,hd) f32
+— e.g. bq=bk=512, hd=128: ~2.4 MB, comfortably inside the ~16 MB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, scale: float, bq: int, bk: int, n_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    def _step():
+        q = q_ref[0, 0]                                   # (bq, hd)
+        k = k_ref[0, 0]                                   # (bk, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                            # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                    # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip tiles strictly above the diagonal (triangular schedule)
+        pl.when(k_start <= q_start + bq - 1)(_step)
+    else:
+        _step()
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, block_q: int = 512,
+                           block_k: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, hd); k, v: (B, Hkv, Skv, hd) -> (B, Hq, Sq, hd)."""
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Skv, _ = k.shape
+    rep = Hq // Hkv
+    bq, bk = min(block_q, Sq), min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, Skv, bq, bk)
+    nq, nk = Sq // bq, Skv // bk
+    scale = 1.0 / math.sqrt(hd)
+    grid = (B, Hq, nq, nk)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, causal=causal, scale=scale,
+                          bq=bq, bk=bk, n_k=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, qi, ki, rep=rep: (b, h // rep, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, qi, ki, rep=rep: (b, h // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # m
+            pltpu.VMEM((bq, 1), jnp.float32),    # l
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,23 @@
+"""Public flash-attention op: Pallas on TPU, interpret for validation,
+jnp oracle fallback."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "force_pallas"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, force_pallas: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=not on_tpu)
+    return attention_ref(q, k, v, causal=causal)

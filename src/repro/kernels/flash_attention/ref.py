@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: full materialized GQA attention with safe softmax."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q: (B, Hq, Sq, hd); k,v: (B, Hkv, Skv, hd)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, rep, Sq, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bgrqh,bgkh->bgrqk", qf, kf) / math.sqrt(hd)
+    if causal:
+        mask = jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bgkh->bgrqh", p, vf)
+    return out.reshape(B, Hq, Sq, hd).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import matmul
+
+__all__ = ["matmul"]

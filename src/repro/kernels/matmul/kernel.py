@@ -1,0 +1,58 @@
+"""Blocked MXU GEMM (the paper's compute-bound kernel class, TPU-native).
+
+Tiling: grid (M/bm, N/bn, K/bk); each (i, j) output tile accumulates over the
+k axis in an f32 VMEM scratch, writing the result once on the last k step.
+Block shapes default to MXU-aligned 128 multiples; the K-innermost grid order
+makes the accumulator live across the contraction (standard TPU GEMM
+schedule).  VMEM footprint = bm*bk + bk*bn + bm*bn (f32 scratch) + bm*bn out.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(x: jax.Array, y: jax.Array, *, block_m: int = 256,
+                  block_n: int = 256, block_k: int = 512,
+                  out_dtype=None, interpret: bool = False) -> jax.Array:
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) must tile by ({bm},{bn},{bk})")
+    out_dtype = out_dtype or x.dtype
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

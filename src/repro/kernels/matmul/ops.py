@@ -1,0 +1,23 @@
+"""Public GEMM op: Pallas on TPU, interpret-mode Pallas for validation,
+jnp fallback otherwise."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import matmul_pallas
+from .ref import matmul_ref
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                   "force_pallas"))
+def matmul(x: jax.Array, y: jax.Array, *, block_m: int = 256,
+           block_n: int = 256, block_k: int = 512,
+           force_pallas: bool = False) -> jax.Array:
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        return matmul_pallas(x, y, block_m=block_m, block_n=block_n,
+                             block_k=block_k, interpret=not on_tpu)
+    return matmul_ref(x, y)

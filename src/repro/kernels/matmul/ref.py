@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the blocked GEMM."""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(out_dtype)

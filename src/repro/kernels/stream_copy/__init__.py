@@ -1,0 +1,3 @@
+from .ops import stream_copy, stream_scale_add
+
+__all__ = ["stream_copy", "stream_scale_add"]

@@ -1,0 +1,55 @@
+"""HBM streaming kernels (the paper's bandwidth-bound kernel class).
+
+Plain tiled copy plus the fused streaming op real frameworks care about:
+``out = a*x + b*y`` (optimizer/EMA update shape), one read of each operand
+and one write per element — the roofline-bandwidth probe kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def stream_copy_pallas(x: jax.Array, *, block: int = 65536,
+                       interpret: bool = False) -> jax.Array:
+    (n,) = x.shape
+    b = min(block, n)
+    assert n % b == 0
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(n // b,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _saxpby_kernel(x_ref, y_ref, o_ref, *, a: float, b: float):
+    o_ref[...] = (a * x_ref[...].astype(jnp.float32)
+                  + b * y_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def stream_scale_add_pallas(x: jax.Array, y: jax.Array, a: float, b: float,
+                            *, block: int = 65536,
+                            interpret: bool = False) -> jax.Array:
+    (n,) = x.shape
+    blk = min(block, n)
+    assert n % blk == 0
+    return pl.pallas_call(
+        functools.partial(_saxpby_kernel, a=a, b=b),
+        grid=(n // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,)),
+                  pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,28 @@
+"""Public streaming ops."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import stream_copy_pallas, stream_scale_add_pallas
+from .ref import stream_copy_ref, stream_scale_add_ref
+
+
+@partial(jax.jit, static_argnames=("block", "force_pallas"))
+def stream_copy(x, *, block: int = 65536, force_pallas: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        return stream_copy_pallas(x, block=block, interpret=not on_tpu)
+    return stream_copy_ref(x)
+
+
+@partial(jax.jit, static_argnames=("a", "b", "block", "force_pallas"))
+def stream_scale_add(x, y, a: float, b: float, *, block: int = 65536,
+                     force_pallas: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_pallas:
+        return stream_scale_add_pallas(x, y, a, b, block=block,
+                                       interpret=not on_tpu)
+    return stream_scale_add_ref(x, y, a, b)

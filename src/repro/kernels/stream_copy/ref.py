@@ -1,0 +1,12 @@
+"""Oracles for the streaming kernels."""
+
+import jax.numpy as jnp
+
+
+def stream_copy_ref(x):
+    return x + 0  # force a materialized copy
+
+
+def stream_scale_add_ref(x, y, a, b):
+    return (a * x.astype(jnp.float32)
+            + b * y.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production meshes, prove memory/sharding coherence,
+and record roofline inputs.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init); smoke tests and benches import the library normally
+and see 1 device.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, SHAPES, get_config, input_specs, shape_skip_reason
+from ..distributed import hlo_cost, roofline
+from ..distributed.sharding import use_rules
+from ..models import get_model
+from ..optim.adamw import AdamWConfig
+from ..train.step import make_train_step, train_state_init
+from .mesh import devices_per_pod, make_production_mesh
+
+_is_axes_leaf = lambda t: isinstance(t, tuple)
+
+BATCH_AXES = {
+    "tokens": ("batch", None), "labels": ("batch", None),
+    "frames": ("batch", None, None), "image_embeds": ("batch", None, None),
+    "token": ("batch", None), "pos": (),
+}
+
+
+def tree_shardings(shapes_tree, axes_tree, rules, mesh):
+    flat_s, treedef = jax.tree_util.tree_flatten(shapes_tree)
+    flat_a = jax.tree_util.tree_flatten(axes_tree, is_leaf=_is_axes_leaf)[0]
+    if len(flat_s) != len(flat_a):
+        raise ValueError(f"{len(flat_s)} shapes vs {len(flat_a)} axes")
+    out = [NamedSharding(mesh, rules.spec(a, s.shape))
+           for s, a in zip(flat_s, flat_a)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _capture_state(model, opt_cfg):
+    captured = {}
+
+    def initf(key):
+        st, ss = train_state_init(model, key, opt_cfg)
+        captured["specs"] = ss
+        return st
+
+    shapes = jax.eval_shape(initf, jax.random.PRNGKey(0))
+    return shapes, captured["specs"]
+
+
+def _capture_params(model):
+    captured = {}
+
+    def initf(key):
+        p, s = model.init(key)
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(initf, jax.random.PRNGKey(0))
+    return shapes, captured["specs"]
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             opt_overrides: dict | None = None,
+             cfg_overrides: dict | None = None,
+             rules_overrides: dict | None = None,
+             microbatches: int = 1) -> dict:
+    cfg = get_config(arch)
+    skip = shape_skip_reason(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                "status": "skipped", "reason": skip}
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.devices.size
+    dpp = devices_per_pod(mesh)
+    kind = SHAPES[shape]["kind"]
+    t0 = time.time()
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+
+    with use_rules(mesh, overrides=rules_overrides) as rules, mesh:
+        if kind == "train":
+            model = get_model(cfg)
+            opt_cfg = AdamWConfig(**(opt_overrides or {}))
+            state_shapes, state_specs = _capture_state(model, opt_cfg)
+            state_sh = tree_shardings(state_shapes, state_specs, rules, mesh)
+            batch_shapes = input_specs(cfg, shape)
+            batch_sh = tree_shardings(
+                batch_shapes, {k: BATCH_AXES[k] for k in batch_shapes},
+                rules, mesh)
+            step = make_train_step(model, opt_cfg, microbatches=microbatches)
+            lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, None),
+                              donate_argnums=(0,)).lower(
+                                  state_shapes, batch_shapes)
+        else:
+            scfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+            model = get_model(scfg)
+            param_shapes, param_specs = _capture_params(model)
+            param_sh = tree_shardings(param_shapes, param_specs, rules, mesh)
+            batch_shapes = input_specs(scfg, shape)
+            batch_sh = tree_shardings(
+                batch_shapes, {k: BATCH_AXES[k] for k in batch_shapes},
+                rules, mesh)
+            if kind == "prefill":
+                fn = lambda p, b: model.prefill(p, b)
+                lowered = jax.jit(fn, in_shardings=(param_sh, batch_sh)).lower(
+                    param_shapes, batch_shapes)
+            else:   # decode
+                B = SHAPES[shape]["global_batch"]
+                S = SHAPES[shape]["seq_len"]
+                cache_shapes = model.cache_spec(B, S)
+                cache_sh = tree_shardings(
+                    cache_shapes, model.cache_logical_axes(), rules, mesh)
+                fn = lambda p, tok, pos, c: model.decode(p, tok, pos, c)
+                lowered = jax.jit(
+                    fn,
+                    in_shardings=(param_sh, batch_sh["token"], None, cache_sh),
+                    out_shardings=(None, cache_sh),
+                    donate_argnums=(3,)).lower(
+                        param_shapes, batch_shapes["token"],
+                        jnp.asarray(S - 1, jnp.int32), cache_shapes)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    print(mem)                                    # proves it fits
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
+    # XLA's cost_analysis counts while bodies once; the walker multiplies by
+    # known_trip_count and accounts collectives (see hlo_cost docstring)
+    t0w = time.time()
+    totals = hlo_cost.analyze(compiled.as_text(), devices_per_pod=dpp)
+    t_walk = time.time() - t0w
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    rf = roofline.build_from_walker(arch, shape, mesh_kind, chips, totals,
+                                    cfg, peak_mem_bytes=int(peak))
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "status": "ok",
+        "chips": chips, "kind": kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "walk_s": round(t_walk, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": int(peak),
+        },
+        "xla_cost": {k: float(v) for k, v in cost.items()
+                     if k in ("flops", "bytes accessed", "transcendentals")},
+        "collectives": {
+            "counts": {k: float(v) for k, v in totals.coll_counts.items()},
+            "operand_bytes": totals.coll_operand,
+            "wire_ici": totals.wire_ici,
+            "wire_dcn": totals.wire_dcn,
+        },
+        "roofline": rf.to_dict(),
+        "tags": {"bytes": dict(totals.tag_bytes),
+                 "flops": dict(totals.tag_flops)},
+        "sharding_fallbacks": rules.fallbacks,
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    for a in archs:
+        for s in shapes:
+            for mk in meshes:
+                cells.append((a, s, mk))
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for a, s, mk in cells:
+        path = os.path.join(args.out, f"{a}__{s}__{mk}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"== {a} x {s} x {mk}: exists, skipping")
+            continue
+        print(f"== {a} x {s} x {mk} ==", flush=True)
+        try:
+            rec = run_cell(a, s, mk)
+        except Exception as e:  # record failures as bugs to fix
+            traceback.print_exc()
+            rec = {"arch": a, "shape": s, "mesh": mk, "status": "failed",
+                   "error": f"{type(e).__name__}: {e}"}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skipped"
+        n_fail += st == "failed"
+        if st == "ok":
+            r = rec["roofline"]
+            print(f"   ok: dominant={r['dominant']} "
+                  f"fraction={r['roofline_fraction']:.3f} "
+                  f"mem/dev={rec['memory']['peak_bytes']/2**30:.2f}GiB "
+                  f"(compile {rec['compile_s']}s)", flush=True)
+        else:
+            print(f"   {st}: {rec.get('reason', rec.get('error'))}",
+                  flush=True)
+    print(f"dry-run complete: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Model registry: family -> module with a uniform functional interface.
+
+Every family module provides::
+
+    init(cfg, key)        -> (params, specs)         specs: logical axis names
+    forward(cfg, p, batch)-> logits                  (training compute)
+    prefill(cfg, p, batch)-> (last logits, cache)
+    decode(cfg, p, token, pos, cache) -> (logits, cache)
+    cache_spec(cfg, B, S) -> pytree of ShapeDtypeStruct
+    cache_logical_axes(cfg) -> matching logical-axis tree
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from ..configs.base import ModelConfig
+from . import jamba, mamba2, moe, transformer, vlm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    prefill: Callable
+    decode: Callable
+    cache_spec: Callable
+    cache_logical_axes: Callable
+
+
+_FAMILY = {
+    "dense": transformer,
+    "audio": transformer,
+    "moe": moe,
+    "ssm": mamba2,
+    "hybrid": jamba,
+    "vlm": vlm,
+}
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    mod = _FAMILY[cfg.family]
+    bind = lambda f: (lambda *a, **kw: f(cfg, *a, **kw))
+    return Model(cfg=cfg, init=bind(mod.init), forward=bind(mod.forward),
+                 prefill=bind(mod.prefill), decode=bind(mod.decode),
+                 cache_spec=bind(mod.cache_spec),
+                 cache_logical_axes=bind(mod.cache_logical_axes))

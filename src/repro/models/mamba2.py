@@ -1,0 +1,307 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) layer and model.
+
+The SSD layer is computed with the chunked algorithm: the sequence is split
+into chunks of ``cfg.ssm_chunk``; within a chunk the quadratic (attention-
+dual) form is used, and a lax.scan carries the (heads, head_dim, d_state)
+recurrent state across chunks — O(S * cl) work, O(1) state, which is what
+makes the ``long_500k`` cell feasible.  Decode is the pure recurrence.
+
+Layer structure (n_groups = 1):
+  in_proj -> [z (d_inner), xBC (d_inner + 2 d_state), dt (n_heads)]
+  causal depthwise conv(d_conv) over xBC -> x, B, C
+  SSD recurrence over (dt, A, B, C) with skip D
+  y = RMSNorm(y * silu(z)) -> out_proj
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from . import layers as L
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def ssm_layer_init(cfg: ModelConfig, key):
+    D, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * ds
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    scale = 1.0 / math.sqrt(D)
+    p = {
+        "in_proj": jax.random.uniform(
+            ks[0], (D, 2 * di + 2 * ds + nh), dt, -scale, scale),
+        "conv_w": jax.random.uniform(
+            ks[1], (cfg.ssm_conv, conv_dim), dt, -0.5, 0.5),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "dt_bias": jnp.zeros((nh,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dt),
+        "D": jnp.ones((nh,), dt),
+        "norm": jnp.ones((di,), dt),
+        "out_proj": jax.random.uniform(
+            ks[2], (di, D), dt, -1.0 / math.sqrt(di), 1.0 / math.sqrt(di)),
+    }
+    s = {
+        "in_proj": ("fsdp", "ff"),
+        "conv_w": (None, "ff"),
+        "conv_b": ("ff",),
+        "dt_bias": (None,),
+        "A_log": (None,),
+        "D": (None,),
+        "norm": ("ff",),
+        "out_proj": ("ff", "fsdp"),
+    }
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, p, x):
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cdt = jnp.dtype(cfg.compute_dtype)
+    zxbcdt = x.astype(cdt) @ p["in_proj"].astype(cdt)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * ds]
+    dt_raw = zxbcdt[..., -nh:]
+    return z, xBC, dt_raw
+
+
+def _conv_full(cfg: ModelConfig, p, xBC):
+    """Causal depthwise conv over (B, S, conv_dim)."""
+    K = cfg.ssm_conv
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    w = p["conv_w"].astype(xBC.dtype)                       # (K, C)
+    out = sum(pad[:, i:i + xBC.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + p["conv_b"].astype(xBC.dtype))
+
+
+def _ssd_chunked(cfg: ModelConfig, xh, dt, A, Bmat, Cmat, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, nh, hp); dt: (B, S, nh); A: (nh,) negative;
+    Bmat/Cmat: (B, S, ds).  Returns (y (B,S,nh,hp), final state
+    (B, nh, hp, ds))."""
+    Bsz, S, nh, hp = xh.shape
+    ds = Bmat.shape[-1]
+    cl = min(cfg.ssm_chunk, S)
+    nc = -(-S // cl)
+    pad = nc * cl - S
+    if pad:
+        # dt=0 padding is an identity recurrence step (decay=1, no input)
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    S_p = nc * cl
+    f32 = jnp.float32
+    xh = xh.astype(f32)
+    dt = dt.astype(f32)
+    Bm = Bmat.astype(f32).reshape(Bsz, nc, cl, ds)
+    Cm = Cmat.astype(f32).reshape(Bsz, nc, cl, ds)
+    # heads are independent in SSD: shard the big sequence-level tensors and
+    # the per-chunk quadratic forms over the model axis (B/C are shared
+    # across heads, n_groups=1, and stay replicated — they are small)
+    xc = constrain(xh.reshape(Bsz, nc, cl, nh, hp),
+                   "batch", None, None, "heads", None)
+    dtc = constrain(dt.reshape(Bsz, nc, cl, nh),
+                    "batch", None, None, "heads")
+    del S_p
+    da = dtc * A[None, None, None, :]                       # (B,nc,cl,nh) <= 0
+    cum = jnp.cumsum(da, axis=2)                            # within-chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, hp, ds), f32)
+    h0 = constrain(h0, "batch", "heads", None, None)
+
+    @jax.checkpoint
+    def chunk_step(h, inp):
+        xck, dtck, dack, cumk, Bk, Ck = inp
+        # intra-chunk quadratic form
+        Lmat = jnp.exp(cumk[:, :, None, :] - cumk[:, None, :, :])
+        tri = jnp.tril(jnp.ones((cl, cl), bool))
+        Lmat = jnp.where(tri[None, :, :, None], Lmat, 0.0)   # (B,cl,cl,nh)
+        scores = jnp.einsum("bqs,bks->bqk", Ck, Bk)          # (B,cl,cl)
+        att = scores[..., None] * Lmat                       # (B,q,k,nh)
+        xdt = xck * dtck[..., None]                          # (B,cl,nh,hp)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", att, xdt)
+        # inter-chunk contribution from carried state
+        decay_in = jnp.exp(cumk)                             # (B,cl,nh)
+        y_inter = jnp.einsum("bqs,bhps->bqhp", Ck, h) * decay_in[..., None]
+        y = y_intra + y_inter
+        # state update: h' = exp(sum da) h + sum_j exp(cum_end - cum_j) B_j xdt_j
+        total = cumk[:, -1]                                  # (B,nh)
+        w = jnp.exp(total[:, None, :] - cumk)                # (B,cl,nh)
+        dstate = jnp.einsum("bks,bkhp,bkh->bhps", Bk, xdt, w)
+        h_new = jnp.exp(total)[:, :, None, None] * h + dstate
+        return h_new, y
+
+    hT, ys = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+         jnp.moveaxis(da, 1, 0), jnp.moveaxis(cum, 1, 0),
+         jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, nc * cl, nh, hp)[:, :S]
+    return y, hT
+
+
+def ssm_layer_full(cfg: ModelConfig, p, x, h0=None, conv_state=None):
+    """Full-sequence SSD layer.  Returns (out, (ssm_state, conv_state))."""
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    z, xBC, dt_raw = _split_proj(cfg, p, x)
+    xBC = _conv_full(cfg, p, xBC)
+    xs = xBC[..., :di].reshape(*x.shape[:2], nh, hp)
+    Bmat = xBC[..., di:di + ds]
+    Cmat = xBC[..., di + ds:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, hT = _ssd_chunked(cfg, xs, dt, A, Bmat, Cmat, h0)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], di)
+    y = _gated_norm(p, y, z)
+    out = y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)
+    new_conv = None
+    if conv_state is not None:
+        raw = _raw_xbc(cfg, p, x)
+        new_conv = raw[:, -(cfg.ssm_conv - 1):, :]
+    return constrain(out, "batch", "seq_sp", None), (hT, new_conv)
+
+
+def _raw_xbc(cfg, p, x):
+    di, ds = cfg.d_inner, cfg.ssm_state
+    cdt = jnp.dtype(cfg.compute_dtype)
+    zxbcdt = x.astype(cdt) @ p["in_proj"].astype(cdt)
+    return zxbcdt[..., di:di + di + 2 * ds]
+
+
+def _gated_norm(p, y, z):
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), -1, keepdims=True)
+    return (y * jax.lax.rsqrt(ms + 1e-6) * p["norm"].astype(jnp.float32)
+            ).astype(z.dtype)
+
+
+def ssm_layer_step(cfg: ModelConfig, p, x, ssm_state, conv_state):
+    """One-token recurrence.  x: (B, 1, D); ssm_state: (B, nh, hp, ds);
+    conv_state: (B, d_conv-1, conv_dim)."""
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    z, xBC_raw, dt_raw = _split_proj(cfg, p, x)
+    window = jnp.concatenate([conv_state, xBC_raw], axis=1)  # (B, K, C)
+    w = p["conv_w"].astype(window.dtype)
+    xBC = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w)
+                      + p["conv_b"].astype(window.dtype))[:, None, :]
+    new_conv = window[:, 1:, :]
+    xs = xBC[..., :di].reshape(-1, nh, hp)
+    Bmat = xBC[:, 0, di:di + ds].astype(jnp.float32)
+    Cmat = xBC[:, 0, di + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B, nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                    # (B, nh)
+    xdt = xs.astype(jnp.float32) * dt[..., None]               # (B, nh, hp)
+    h = (decay[..., None, None] * ssm_state
+         + jnp.einsum("bs,bhp->bhps", Bmat, xdt))
+    y = jnp.einsum("bs,bhps->bhp", Cmat, h)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, 1, di)
+    y = _gated_norm(p, y, z)
+    out = y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)
+    return out, (h, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# model (mamba2-130m: all layers SSM, norm + residual)
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, key):
+    p, s = {}, {}
+    p["ln"], s["ln"] = L.norm_init(cfg.d_model, cfg.norm,
+                                   jnp.dtype(cfg.param_dtype))
+    p["ssm"], s["ssm"] = ssm_layer_init(cfg, key)
+    return p, s
+
+
+def init(cfg: ModelConfig, key):
+    kemb, klay = jax.random.split(key)
+    p, s = {}, {}
+    p["tok"], s["tok"] = L.embedding_init(cfg, kemb)
+    keys = jax.random.split(klay, cfg.n_layers)
+    p["layers"] = jax.vmap(lambda k: _layer_init(cfg, k)[0])(keys)
+    _, s1 = _layer_init(cfg, jax.random.PRNGKey(0))
+    s["layers"] = jax.tree.map(lambda t: (None, *t), s1,
+                               is_leaf=lambda t: isinstance(t, tuple))
+    p["ln_f"], s["ln_f"] = L.norm_init(cfg.d_model, cfg.norm,
+                                       jnp.dtype(cfg.param_dtype))
+    return p, s
+
+
+def forward(cfg: ModelConfig, p, batch):
+    x = L.embed_tokens(cfg, p["tok"], batch["tokens"])
+    blk = jax.checkpoint(
+        lambda x, lp: x + ssm_layer_full(
+            cfg, lp["ssm"], L.apply_norm(lp["ln"], x, cfg.norm))[0])
+
+    def body(x, lp):
+        return blk(x, lp), None
+
+    x, _ = jax.lax.scan(body, x, p["layers"])
+    x = L.apply_norm(p["ln_f"], x, cfg.norm)
+    return L.lm_head(cfg, p["tok"], x)
+
+
+def prefill(cfg: ModelConfig, p, batch):
+    x = L.embed_tokens(cfg, p["tok"], batch["tokens"])
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln"], x, cfg.norm)
+        out, (hT, conv) = ssm_layer_full(cfg, lp["ssm"], h,
+                                         conv_state=jnp.zeros(()))
+        return x + out, (hT, conv)
+
+    x, (hs, convs) = jax.lax.scan(body, x, p["layers"])
+    x = L.apply_norm(p["ln_f"], x, cfg.norm)
+    return (L.lm_head(cfg, p["tok"], x[:, -1:]),
+            {"ssm": hs, "conv": convs})
+
+
+def decode(cfg: ModelConfig, p, token, pos, cache):
+    x = L.embed_tokens(cfg, p["tok"], token)
+
+    def body(x, xs):
+        lp, h0, conv = xs
+        hin = L.apply_norm(lp["ln"], x, cfg.norm)
+        out, (h, new_conv) = ssm_layer_step(cfg, lp["ssm"], hin, h0, conv)
+        return x + out, (h, new_conv)
+
+    x, (hs, convs) = jax.lax.scan(
+        body, x, (p["layers"], cache["ssm"], cache["conv"]))
+    x = L.apply_norm(p["ln_f"], x, cfg.norm)
+    return L.lm_head(cfg, p["tok"], x), {"ssm": hs, "conv": convs}
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    nh, hp, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * ds
+    return {
+        "ssm": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, nh, hp, ds), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim),
+            jnp.dtype(cfg.compute_dtype)),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    return {"ssm": (None, "batch", None, None, None),
+            "conv": (None, "batch", None, "ff")}

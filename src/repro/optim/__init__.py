@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from .compression import compressed_allreduce_demo, ef_compress_grads, ef_init
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+           "compressed_allreduce_demo", "ef_compress_grads", "ef_init"]

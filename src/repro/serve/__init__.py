@@ -1,0 +1,4 @@
+from .engine import Request, ServeEngine
+from .scheduler import ElasticServeScheduler, RequestClass
+
+__all__ = ["Request", "ServeEngine", "ElasticServeScheduler", "RequestClass"]

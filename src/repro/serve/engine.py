@@ -1,0 +1,142 @@
+"""Continuous-batching serving engine.
+
+Real execution path (works on one CPU device with a reduced model; on a pod
+each width-w place holds a compiled executable pair):
+
+* requests arrive with prompt tokens; admission pads/batches prompts and
+  runs ``model.prefill``; KV caches are padded to the engine's max length
+  and merged into the active decode batch;
+* every engine step decodes one token for the whole active batch;
+* finished sequences (max_new reached) free their slots;
+* the :class:`ElasticServeScheduler` is consulted per prefill (critical) and
+  per decode batch (non-critical) so the PTT learns group/width latencies —
+  on one device the decision is degenerate but the full control path runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Model
+from .scheduler import ElasticServeScheduler
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (prompt_len,)
+    max_new: int
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, max_batch: int, max_seq: int,
+                 num_groups: int = 1):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.scheduler = ElasticServeScheduler(num_groups)
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * max_batch
+        self.cache = None
+        self.pos = np.zeros(max_batch, dtype=np.int32)
+        self.cur_token = np.zeros((max_batch, 1), dtype=np.int32)
+        self._decode = jax.jit(
+            lambda p, t, pos, c: model.decode(p, t, pos, c))
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def _admit(self) -> None:
+        # wave admission: the decode path takes a scalar position, so a wave
+        # admits equal-prompt-length requests into an empty batch (ragged
+        # positions need per-slot pos / paged KV — see DESIGN.md future work)
+        if any(r is not None for r in self.active) or not self.queue:
+            return
+        wave_len = len(self.queue[0].prompt)
+        slots = self._free_slots()
+        while slots and self.queue and len(self.queue[0].prompt) == wave_len:
+            req = self.queue.popleft()
+            slot = slots.pop(0)
+            t0 = time.perf_counter()
+            d = self.scheduler.schedule_prefill(len(req.prompt))
+            logits, cache = self.model.prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
+            next_tok = int(jnp.argmax(logits[0, -1]))
+            self.scheduler.record(d, time.perf_counter() - t0,
+                                  time.perf_counter())
+            req.out_tokens.append(next_tok)
+            self._merge_cache(slot, cache, len(req.prompt))
+            self.active[slot] = req
+            self.pos[slot] = len(req.prompt)
+            self.cur_token[slot, 0] = next_tok
+
+    def _merge_cache(self, slot: int, cache, prompt_len: int) -> None:
+        if self.cache is None:
+            spec = self.model.cache_spec(self.max_batch, self.max_seq)
+            self.cache = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), spec)
+        axes = self.model.cache_logical_axes()
+
+        def merge(full, new, ax):
+            b_axis = ax.index("batch")       # model-declared batch axis
+            idx = [slice(None)] * full.ndim
+            idx[b_axis] = slice(slot, slot + 1)
+            pad = [(0, 0)] * full.ndim
+            for i, (df, dn) in enumerate(zip(full.shape, new.shape)):
+                if i != b_axis and df != dn:
+                    pad[i] = (0, df - dn)
+            new = jnp.pad(new, pad)
+            return full.at[tuple(idx)].set(new.astype(full.dtype))
+
+        self.cache = jax.tree.map(
+            merge, self.cache, cache, axes,
+            is_leaf=lambda t: isinstance(t, jax.Array))
+
+    # -- decode loop ---------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration: admit + decode one token for the batch.
+        Returns number of active sequences."""
+        self._admit()
+        n_active = sum(r is not None for r in self.active)
+        if n_active == 0:
+            return 0
+        t0 = time.perf_counter()
+        d = self.scheduler.schedule_decode(group=0)
+        # batched single-position decode: use the max position (padded slots
+        # attend to zeros, harmless; per-slot masking via position arg)
+        pos = int(self.pos.max())
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self.cur_token), jnp.asarray(pos),
+            self.cache)
+        self.scheduler.record(d, time.perf_counter() - t0,
+                              time.perf_counter())
+        toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out_tokens.append(int(toks[i]))
+            self.pos[i] += 1
+            self.cur_token[i, 0] = int(toks[i])
+            if len(req.out_tokens) >= req.max_new or self.pos[i] >= self.max_seq - 1:
+                req.done = True
+                self.active[i] = None
+        return n_active
+
+    def run_until_drained(self, max_steps: int = 10000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                return

@@ -1,0 +1,5 @@
+from .step import TrainState, make_eval_step, make_train_step, train_state_init
+from .losses import cross_entropy
+
+__all__ = ["TrainState", "make_eval_step", "make_train_step",
+           "train_state_init", "cross_entropy"]

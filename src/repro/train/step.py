@@ -1,0 +1,108 @@
+"""Training step factory.
+
+Features:
+* next-token LM loss (or frame-classification for the audio family),
+* microbatch gradient accumulation via lax.scan (bucketed so XLA can overlap
+  the bucket-i gradient reduction with bucket-i+1 compute),
+* optional error-feedback int8 compression of the cross-pod gradient hop,
+* AdamW with fully-sharded state; donated-argument friendly pure function.
+
+The returned ``train_step(state, batch) -> (state, metrics)`` is what the
+launcher jits with in/out shardings and what the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import Model
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from ..optim.compression import ef_compress_grads, ef_init
+from .losses import cross_entropy
+
+TrainState = dict          # {"params", "opt", "ef" (optional)}
+
+
+def train_state_init(model: Model, key, opt_cfg: AdamWConfig,
+                     compress_dcn: bool = False):
+    params, specs = model.init(key)
+    state = {"params": params, "opt": adamw_init(params)}
+    state_specs = {"params": specs,
+                   "opt": {"m": specs, "v": specs, "step": ()}}
+    if compress_dcn:
+        state["ef"] = ef_init(params)
+        state_specs["ef"] = specs
+    return state, state_specs
+
+
+def _loss_fn(model: Model, cfg: ModelConfig, params, batch):
+    if cfg.family == "audio":
+        logits = model.forward(params, {"frames": batch["frames"]})
+        return cross_entropy(logits, batch["labels"])
+    fwd_batch = {"tokens": batch["tokens"]}
+    if cfg.family == "vlm":
+        fwd_batch["image_embeds"] = batch["image_embeds"]
+    logits = model.forward(params, fwd_batch)
+    # next-token prediction: logits[t] predicts labels[t]
+    return cross_entropy(logits, batch["labels"])
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    microbatches: int = 1,
+                    compress_dcn: bool = False) -> Callable:
+    cfg = model.cfg
+
+    def train_step(state: TrainState, batch):
+        params = state["params"]
+        if microbatches <= 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: _loss_fn(model, cfg, p, batch))(params)
+        else:
+            # split batch leading dim into microbatches and accumulate
+            def slice_mb(i):
+                return jax.tree.map(
+                    lambda a: a.reshape(microbatches, -1, *a.shape[1:])[i]
+                    if a.ndim >= 1 else a, batch)
+
+            def mb_step(carry, i):
+                acc, loss_acc = carry
+                mb = slice_mb(i)
+                loss, g = jax.value_and_grad(
+                    lambda p: _loss_fn(model, cfg, p, mb))(params)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + loss), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (gsum, loss_sum), _ = jax.lax.scan(
+                mb_step, (zero, jnp.zeros((), jnp.float32)),
+                jnp.arange(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = loss_sum / microbatches
+
+        new_state = dict(state)
+        if compress_dcn:
+            grads, new_ef = ef_compress_grads(grads, state["ef"])
+            new_state["ef"] = new_ef
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, state["opt"], params)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    cfg = model.cfg
+
+    def eval_step(params, batch):
+        return _loss_fn(model, cfg, params, batch)
+
+    return eval_step

@@ -1,0 +1,67 @@
+"""DAG model: criticality, parallelism, generator properties (paper §2, §4.2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (KernelType, RandomDAGConfig, chain_dag,
+                        generate_random_dag, is_critical_child,
+                        paper_fig1_dag)
+
+
+def test_fig1_criticality_matches_paper():
+    d = paper_fig1_dag()
+    A, B, C, D, E, F, G = range(7)
+    # paper: crit path A->C->G->D->F, length 5, parallelism 7/5 = 1.4
+    assert d.critical_path_length == 5
+    assert d.parallelism == pytest.approx(1.4)
+    assert d.nodes[A].criticality == 5
+    assert d.nodes[C].criticality == 4
+    assert d.nodes[G].criticality == 3
+    assert d.nodes[D].criticality == 2
+    assert d.nodes[F].criticality == 1
+    assert d.critical_tasks() == {A, C, G, D, F}
+
+
+def test_fig1_runtime_rule():
+    d = paper_fig1_dag()
+    A, B, C, D, E, F, G = range(7)
+    assert is_critical_child(d.nodes[A], d.nodes[C])
+    assert not is_critical_child(d.nodes[A], d.nodes[E])
+    assert is_critical_child(d.nodes[C], d.nodes[G])
+
+
+def test_chain_dag():
+    d = chain_dag(KernelType.MATMUL, 17)
+    assert d.critical_path_length == 17
+    assert d.parallelism == 1.0
+    assert len(d.critical_tasks()) == 17
+
+
+@given(n=st.integers(3, 120), width=st.integers(1, 12),
+       rate=st.floats(0.5, 4.0), seed=st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_generator_properties(n, width, rate, seed):
+    cfg = RandomDAGConfig(
+        tasks_per_kernel={KernelType.MATMUL: n // 2, KernelType.SORT: n - n // 2},
+        avg_width=width, edge_rate=rate, seed=seed)
+    d = generate_random_dag(cfg)
+    assert len(d.nodes) == n
+    order = d.topo_order()              # acyclic
+    assert sorted(order) == list(range(n))
+    pos = {nid: i for i, nid in enumerate(order)}
+    for node in d.nodes:
+        for c in node.children:
+            assert pos[node.nid] < pos[c]
+            # criticality strictly decreases along edges by >= 1
+            assert node.criticality >= d.nodes[c].criticality + 1
+    assert 1.0 <= d.parallelism <= n
+    # data-reuse step assigned a slot to every node
+    assert all(node.data_slot >= 0 for node in d.nodes)
+
+
+def test_generator_deterministic():
+    cfg = RandomDAGConfig(tasks_per_kernel={KernelType.COPY: 50},
+                          avg_width=4, edge_rate=2.0, seed=7)
+    a, b = generate_random_dag(cfg), generate_random_dag(cfg)
+    assert [n.parents for n in a.nodes] == [n.parents for n in b.nodes]

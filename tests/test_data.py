@@ -1,0 +1,39 @@
+"""Deterministic resumable sharded data pipeline."""
+
+import numpy as np
+
+from repro.data import DataConfig, SyntheticLMData
+
+
+def test_deterministic_and_resumable():
+    cfg = DataConfig(vocab=101, global_batch=8, seq_len=16, seed=3)
+    a = SyntheticLMData(cfg)
+    b = SyntheticLMData(cfg, start_step=0)
+    ba = [a.batch_at(i) for i in range(5)]
+    for i in range(5):
+        np.testing.assert_array_equal(ba[i]["tokens"],
+                                      b.batch_at(i)["tokens"])
+    # resume from step 3 reproduces step-3 batch
+    c = SyntheticLMData(cfg, start_step=3)
+    np.testing.assert_array_equal(next(c)["tokens"], ba[3]["tokens"])
+    for d in (a, b, c):
+        d.close()
+
+
+def test_shards_partition_global_batch():
+    g = DataConfig(vocab=50, global_batch=8, seq_len=8, seed=1)
+    full = SyntheticLMData(g).batch_at(2)["tokens"]
+    parts = []
+    for s in range(4):
+        cfg = DataConfig(vocab=50, global_batch=8, seq_len=8, seed=1,
+                         n_shards=4, shard=s)
+        parts.append(SyntheticLMData(cfg).batch_at(2)["tokens"])
+    np.testing.assert_array_equal(np.concatenate(parts, 0), full)
+
+
+def test_labels_are_next_tokens():
+    cfg = DataConfig(vocab=37, global_batch=2, seq_len=12, seed=0)
+    b = SyntheticLMData(cfg).batch_at(0)
+    assert b["tokens"].shape == (2, 12)
+    assert b["labels"].shape == (2, 12)
+    assert (b["tokens"] < 37).all() and (b["labels"] >= 0).all()

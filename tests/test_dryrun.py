@@ -1,0 +1,66 @@
+"""Dry-run machinery on a tiny mesh (full 512-device grid runs via
+`python -m repro.launch.dryrun`; artifacts in artifacts/dryrun)."""
+
+import pytest
+
+
+def test_tiny_mesh_train_lower_compile(subproc):
+    subproc("""
+    import dataclasses, jax, jax.numpy as jnp
+    from repro.configs import get_config, input_specs
+    from repro.distributed.sharding import use_rules
+    from repro.distributed import hlo_cost
+    from repro.launch.dryrun import BATCH_AXES, _capture_state, tree_shardings
+    from repro.models import get_model
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.step import make_train_step
+
+    cfg = dataclasses.replace(get_config("qwen2-0.5b", reduced=True),
+                              n_layers=2)
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    with use_rules(mesh) as rules, mesh:
+        model = get_model(cfg)
+        opt = AdamWConfig()
+        shapes, specs = _capture_state(model, opt)
+        sh = tree_shardings(shapes, specs, rules, mesh)
+        import jax as j
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+        }
+        bsh = tree_shardings(batch, {k: BATCH_AXES[k] for k in batch},
+                             rules, mesh)
+        step = make_train_step(model, opt)
+        compiled = jax.jit(step, in_shardings=(sh, bsh),
+                           out_shardings=(sh, None)).lower(
+                               shapes, batch).compile()
+    mem = compiled.memory_analysis()
+    assert mem.temp_size_in_bytes > 0
+    t = hlo_cost.analyze(compiled.as_text())
+    assert t.flops > 0 and t.bytes > 0
+    print("OK")
+    """, devices=4)
+
+
+def test_skip_rules():
+    from repro.configs import get_config, shape_skip_reason
+    assert shape_skip_reason(get_config("qwen2-0.5b"), "long_500k")
+    assert shape_skip_reason(get_config("hubert-xlarge"), "decode_32k")
+    assert shape_skip_reason(get_config("mamba2-130m"), "long_500k") is None
+    assert shape_skip_reason(get_config("jamba-v0.1-52b"), "long_500k") is None
+    assert shape_skip_reason(get_config("qwen2-0.5b"), "train_4k") is None
+
+
+def test_all_cells_enumerated():
+    """31 runnable + 9 skipped = 40 assigned cells."""
+    from repro.configs import ARCH_IDS, SHAPES, get_config, shape_skip_reason
+    runnable = skipped = 0
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            if shape_skip_reason(get_config(a), s):
+                skipped += 1
+            else:
+                runnable += 1
+    assert runnable + skipped == 40
+    assert skipped == 9

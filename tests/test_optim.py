@@ -1,0 +1,80 @@
+"""AdamW + gradient compression numerics."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         compressed_allreduce_demo, cosine_lr,
+                         ef_compress_grads, ef_init)
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                      weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(150):
+        g = {"w": 2 * params["w"]}               # d/dw w^2
+        params, state, m = adamw_update(cfg, g, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(lr=0.0, clip_norm=1.0)
+    params = {"w": jnp.ones((4,))}
+    state = adamw_init(params)
+    _, _, metrics = adamw_update(cfg, {"w": jnp.full((4,), 100.0)}, state,
+                                 params)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_cosine_schedule_endpoints():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(cosine_lr(cfg, 0)) == pytest.approx(0.0)
+    assert float(cosine_lr(cfg, 10)) == pytest.approx(1.0, rel=1e-2)
+    assert float(cosine_lr(cfg, 100)) == pytest.approx(0.1, rel=1e-2)
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_error_feedback_unbiased_over_time(seed):
+    """int8 EF compression: accumulated compressed sum tracks the true sum
+    (error feedback re-injects quantization residue)."""
+    k = jax.random.PRNGKey(seed)
+    g = {"w": jax.random.normal(k, (64,))}
+    res = ef_init(g)
+    total_c = jnp.zeros((64,))
+    for i in range(20):
+        gi = {"w": g["w"] * (1 + 0.1 * i)}
+        c, res = ef_compress_grads(gi, res)
+        total_c = total_c + c["w"]
+    total_true = sum(g["w"] * (1 + 0.1 * i) for i in range(20))
+    # residual bounds the drift
+    err = np.abs(np.asarray(total_c + res["w"] - total_true)).max()
+    assert err < 1e-3
+
+
+def test_compressed_allreduce_demo(subproc):
+    subproc("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.optim import compressed_allreduce_demo
+    mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    x = jnp.arange(64, dtype=jnp.float32) / 64.0
+    with mesh:
+        out = compressed_allreduce_demo(x, mesh)
+    # device r contributes x*(1+0.01r); mean over ranks 0..7 = x*1.035
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 1.035,
+                               atol=2e-2)
+    # int8 payload visible in compiled HLO
+    with mesh:
+        txt = jax.jit(lambda x: compressed_allreduce_demo(x, mesh)).lower(
+            x).compile().as_text()
+    assert "s8[" in txt and "all-gather" in txt
+    print("OK")
+    """, devices=8)

@@ -1,0 +1,90 @@
+"""PTT math (paper §3.2/3.3): EMA 1:4, bootstrap, global/local search, and
+python<->JAX implementation parity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PTT, PTTConfig, ClusterLayout, homogeneous_layout
+from repro.core.ptt import (make_ptt_array, ptt_global_search,
+                            ptt_local_search, ptt_update)
+
+
+def make(clusters=((0, 1), (2, 3, 4, 5)), types=2):
+    return PTT(PTTConfig(layout=ClusterLayout(clusters=clusters),
+                         num_task_types=types))
+
+
+def test_ema_update_rule():
+    p = make()
+    p.update(0, 0, 1, 10.0)          # first sample adopted
+    assert p.value(0, 0, 1) == 10.0
+    p.update(0, 0, 1, 5.0)           # (4*10 + 5) / 5 = 9.0  (paper formula)
+    assert p.value(0, 0, 1) == pytest.approx(9.0)
+
+
+def test_bootstrap_visits_untrained():
+    p = make()
+    seen = set()
+    for _ in range(len(p.places)):
+        pl = p.global_search(0)
+        assert (pl.leader, pl.width) not in seen, "revisited before training"
+        seen.add((pl.leader, pl.width))
+        p.update(0, pl.leader, pl.width, 1.0)
+    assert len(seen) == len(p.places)
+
+
+def test_global_search_minimizes_time_x_width():
+    p = make()
+    p.update(0, 2, 2, 0.4)                 # occupancy cost 0.8
+    p.update(0, 2, 4, 0.25)                # faster but cost 1.0
+    for pl in p.places:
+        if (pl.leader, pl.width) not in ((2, 2), (2, 4)):
+            p.update(0, pl.leader, pl.width, 1.0)      # cost = width
+    best = p.global_search(0)              # paper metric: time * width
+    assert (best.leader, best.width) == (2, 2)
+    lat = p.global_search(0, metric="latency")   # serving TTFT metric
+    assert (lat.leader, lat.width) == (2, 4)
+
+
+def test_cluster_validity():
+    p = make()
+    widths = {(pl.leader, pl.width) for pl in p.places}
+    assert (0, 4) not in widths          # Denver cluster only has 2 cores
+    assert (2, 4) in widths              # A57 cluster width 4 at leader 2
+    assert (1, 2) not in widths          # misaligned leader
+    assert (4, 2) in widths
+
+
+def test_local_search_stays_on_core():
+    p = make()
+    for pl in p.places:
+        p.update(0, pl.leader, pl.width, 1.0)
+    p.update(0, 0, 1, 0.01)              # core 0 w1 is globally great
+    pl = p.local_search(0, core=3)       # but core 3 must stay local
+    assert 3 in pl
+
+
+@given(updates=st.lists(
+    st.tuples(st.integers(0, 7), st.integers(0, 2),
+              st.floats(0.1, 10.0)), min_size=1, max_size=60))
+@settings(max_examples=30, deadline=None)
+def test_jax_python_parity(updates):
+    """The jit-able functional PTT matches the runtime PTT on homogeneous
+    pow2 layouts."""
+    import jax.numpy as jnp
+    n_cores, widths = 8, (1, 2, 4, 8)
+    py = PTT(PTTConfig(layout=homogeneous_layout(n_cores), num_task_types=1))
+    tab = make_ptt_array(1, n_cores, widths)
+    w2i = {w: i for i, w in enumerate(widths)}
+    for core, wi, t in updates:
+        w = widths[wi]
+        leader = (core // w) * w
+        py.update(0, leader, w, t)
+        tab = ptt_update(tab, 0, leader, wi, t)
+    np.testing.assert_allclose(np.asarray(tab[0]), py.table(0), rtol=1e-5)
+    leader, wi = ptt_global_search(tab, 0, widths)
+    best = py.global_search(0)
+    cost_jax = float(tab[0, leader, wi]) * widths[int(wi)]
+    cost_py = py.value(0, best.leader, best.width) * best.width
+    assert cost_jax == pytest.approx(cost_py, rel=1e-5)

@@ -1,0 +1,52 @@
+"""Logical-axis sharding rules: divisibility fallbacks, dedupe, no-op."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (AxisRules, DEFAULT_RULES, constrain,
+                                        use_rules)
+
+
+def test_constrain_noop_without_rules():
+    x = jnp.ones((4, 4))
+    assert constrain(x, "batch", None) is x or (constrain(x, "batch", None)
+                                                == x).all()
+
+
+def test_spec_and_fallbacks(subproc):
+    subproc("""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import AxisRules, DEFAULT_RULES
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    r = AxisRules(mesh, dict(DEFAULT_RULES))
+    # divisible: heads 8 over model 4
+    assert r.spec(("batch", None, "heads", None), (8, 16, 8, 64)) == \
+        P("data", None, "model", None)
+    # non-divisible head dim falls back to replication and records it
+    spec = r.spec(("batch", None, "heads", None), (8, 16, 9, 64))
+    assert spec == P("data", None, None, None)
+    assert any("heads" in f for f in r.fallbacks)
+    # axis dedupe: batch takes 'data', fsdp cannot reuse it
+    spec2 = r.spec(("batch", "fsdp"), (8, 8))
+    assert spec2 == P("data", None)
+    print("OK")
+    """, devices=8)
+
+
+def test_multi_axis_batch(subproc):
+    subproc("""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import AxisRules, DEFAULT_RULES
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*3)
+    r = AxisRules(mesh, dict(DEFAULT_RULES))
+    assert r.spec(("batch", None), (8, 4)) == P(("pod", "data"), None)
+    # batch=2 divides pod only -> prefix fallback
+    assert r.spec(("batch", None), (2, 4)) == P(("pod",), None)
+    print("OK")
+    """, devices=8)

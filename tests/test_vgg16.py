@@ -1,0 +1,27 @@
+"""VGG-16 TAO-DAG construction (paper §4.3)."""
+
+import pytest
+
+from repro.sim.vgg16 import VGG16_LAYERS, VGGConfig, layer_gflops, total_gflops, vgg16_dag
+
+
+def test_structure():
+    assert len(VGG16_LAYERS) == 16            # 13 conv + 3 fc
+    d = vgg16_dag(VGGConfig(block_len=64))
+    # layer barriers: every node in layer i+1 depends on all of layer i
+    by_level = {}
+    for n in d.nodes:
+        lvl = 0 if not n.parents else None
+    # instead: parallelism equals widest layer TAO count
+    assert d.critical_path_length == 16
+
+
+def test_flops_scale():
+    assert total_gflops() == pytest.approx(30.9, rel=0.05)   # classic VGG-16
+    assert layer_gflops(1) > layer_gflops(0)                  # conv2 biggest
+
+
+def test_work_conservation():
+    d = vgg16_dag(VGGConfig(block_len=8))
+    total = sum(n.work for n in d.nodes)
+    assert total == pytest.approx(total_gflops(), rel=1e-6)
