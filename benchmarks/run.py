@@ -13,8 +13,8 @@ import time
 import traceback
 
 from . import (fig5_heatmap, fig6_kernels, fig7_speedup, fig8_interference,
-               fig9_vgg_scaling, fig10_widths, kernel_bench, pod_serving,
-               pod_straggler, roofline)
+               fig9_vgg_scaling, fig10_widths, fleet_routing, kernel_bench,
+               pod_serving, pod_straggler, roofline)
 
 MODULES = (
     ("fig5_heatmap", fig5_heatmap),
@@ -23,6 +23,7 @@ MODULES = (
     ("fig8_interference", fig8_interference),
     ("fig9_vgg_scaling", fig9_vgg_scaling),
     ("fig10_widths", fig10_widths),
+    ("fleet_routing", fleet_routing),
     ("kernel_bench", kernel_bench),
     ("pod_serving", pod_serving),
     ("pod_straggler", pod_straggler),

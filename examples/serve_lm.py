@@ -36,7 +36,7 @@ def main() -> None:
         print(f"  req {r.rid}: prompt={r.prompt[:6].tolist()}... "
               f"-> {r.out_tokens}")
     print(f"PTT updates observed by the serve scheduler: "
-          f"{engine.scheduler.ptt.ptt.updates}")
+          f"{engine.scheduler.ptt.updates}")
 
 
 if __name__ == "__main__":

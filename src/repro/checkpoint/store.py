@@ -1,6 +1,6 @@
 """Sharded, compressed, reshardable checkpoints.
 
-Layout: ``<dir>/step_<n>/{manifest.json, shard_<k>.msgpack.zst}``
+Layout: ``<dir>/step_<n>/{manifest.json, shard_<k>.msgpack.<zst|zz>}``
 
 * Leaves are grouped into `n_shards` files by stable hash of their tree path
   (on a real cluster: one shard set per host group, written in parallel).
@@ -12,6 +12,10 @@ Layout: ``<dir>/step_<n>/{manifest.json, shard_<k>.msgpack.zst}``
   writes on a background thread — the train loop is blocked only for the
   device->host copy.
 * Atomicity: shards are written to a tmp dir, manifest last, then renamed.
+* Compression: zstd when the optional ``zstandard`` package is present,
+  stdlib zlib otherwise.  The manifest records the codec (legacy manifests
+  without the field are zstd), so either build reads either checkpoint as
+  long as the writing codec is importable — and zlib always is.
 """
 
 from __future__ import annotations
@@ -21,12 +25,38 @@ import json
 import os
 import shutil
 import threading
+import zlib
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:          # optional dependency; zlib fallback below
+    zstd = None
 
 import jax
+
+_CODEC_EXT = {"zstd": "zst", "zlib": "zz"}
+_DEFAULT_CODEC = "zstd" if zstd is not None else "zlib"
+
+
+def _compress(data: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        return zstd.ZstdCompressor(level=3).compress(data)
+    return zlib.compress(data, 6)
+
+
+def _decompress(data: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstd is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but the 'zstandard' "
+                "package is not installed")
+        return zstd.ZstdDecompressor().decompress(data)
+    if codec != "zlib":
+        raise ValueError(f"unknown checkpoint codec {codec!r}")
+    return zlib.decompress(data)
 
 
 def _leaf_paths(tree):
@@ -61,12 +91,13 @@ def _write(ckpt_dir: str, step: int, paths, host_leaves, extra: dict,
                            "data": arr.tobytes()}
         index[path] = {"shard": k, "dtype": str(arr.dtype),
                        "shape": list(arr.shape)}
-    cctx = zstd.ZstdCompressor(level=3)
+    codec = _DEFAULT_CODEC
+    ext = _CODEC_EXT[codec]
     for k, blob in shards.items():
-        with open(os.path.join(tmp, f"shard_{k}.msgpack.zst"), "wb") as f:
-            f.write(cctx.compress(msgpack.packb(blob)))
-    manifest = {"step": step, "n_shards": n_shards, "index": index,
-                "extra": extra}
+        with open(os.path.join(tmp, f"shard_{k}.msgpack.{ext}"), "wb") as f:
+            f.write(_compress(msgpack.packb(blob), codec))
+    manifest = {"step": step, "n_shards": n_shards, "codec": codec,
+                "index": index, "extra": extra}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -91,11 +122,14 @@ def load_checkpoint(ckpt_dir: str, step: int, target_tree,
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    dctx = zstd.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")     # pre-codec manifests are zstd
+    ext = _CODEC_EXT.get(codec)
+    if ext is None:
+        raise ValueError(f"unknown checkpoint codec {codec!r}")
     blobs = {}
     for k in range(manifest["n_shards"]):
-        with open(os.path.join(d, f"shard_{k}.msgpack.zst"), "rb") as f:
-            blobs[k] = msgpack.unpackb(dctx.decompress(f.read()))
+        with open(os.path.join(d, f"shard_{k}.msgpack.{ext}"), "rb") as f:
+            blobs[k] = msgpack.unpackb(_decompress(f.read(), codec))
     paths, leaves, treedef = _leaf_paths(target_tree)
     shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
                     else [None] * len(leaves))

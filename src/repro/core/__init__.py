@@ -3,8 +3,8 @@
 from .dag import (KernelType, RandomDAGConfig, TaskDAG, TaskNode, chain_dag,
                   generate_random_dag, is_critical_child, paper_fig1_dag)
 from .places import ClusterLayout, Place, divisor_widths, homogeneous_layout
-from .ptt import (PTT, PTTConfig, make_ptt_array, ptt_global_search,
-                  ptt_local_search, ptt_update)
+from .ptt import (EMASearchMixin, PTT, PTTConfig, make_ptt_array,
+                  ptt_global_search, ptt_local_search, ptt_update)
 from .scheduler import (HomogeneousScheduler, PerformanceBasedScheduler,
                         SchedulingPolicy)
 
@@ -12,7 +12,7 @@ __all__ = [
     "KernelType", "RandomDAGConfig", "TaskDAG", "TaskNode", "chain_dag",
     "generate_random_dag", "is_critical_child", "paper_fig1_dag",
     "ClusterLayout", "Place", "divisor_widths", "homogeneous_layout",
-    "PTT", "PTTConfig", "make_ptt_array", "ptt_global_search",
+    "EMASearchMixin", "PTT", "PTTConfig", "make_ptt_array", "ptt_global_search",
     "ptt_local_search", "ptt_update",
     "HomogeneousScheduler", "PerformanceBasedScheduler", "SchedulingPolicy",
 ]

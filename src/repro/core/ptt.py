@@ -26,7 +26,6 @@ Two implementations live here:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 import numpy as np
@@ -44,8 +43,38 @@ EMA_DEN = 5.0
 _LANE = 8
 
 
-def _ema(old: float, new: float) -> float:
-    return (EMA_OLD * old + new) / EMA_DEN
+class EMASearchMixin:
+    """The PTT math shared by every trace-table scale (core :class:`PTT`,
+    pod :class:`~repro.distributed.elastic.PodPTT`, fleet
+    :class:`~repro.router.FleetPTT`): the paper's EMA-1:4 update with
+    zero-bootstrap (§3.2) and the argmin search where untrained entries
+    score 0 and are therefore visited first (§3.3)."""
+
+    @staticmethod
+    def ema_merge(old, new, old_weight: float = EMA_OLD,
+                  den: float = EMA_DEN):
+        """EMA with zero-bootstrap: an untrained (0.0) entry adopts the
+        sample directly — EMA from zero would take ~10 samples to converge
+        while the entry no longer reads as "untrained".  Works on scalars
+        and numpy arrays; ``old_weight``/``den`` default to the paper's 4:1
+        (override for e.g. a fast 1:1 window)."""
+        if isinstance(old, np.ndarray):
+            return np.where(old == 0.0, new, (old_weight * old + new) / den)
+        return new if old == 0.0 else (old_weight * old + new) / den
+
+    @staticmethod
+    def argmin_search(entries):
+        """``entries``: iterable of (key, cost).  Returns the min-cost key;
+        untrained entries cost 0.0 and win, guaranteeing every valid
+        configuration is eventually trained (bootstrap, paper §3.2).
+        Costs need only support ``<`` — tuples give lexicographic
+        tie-breaking (the fleet router uses (predicted, backlog))."""
+        best, best_cost = None, None
+        for key, cost in entries:
+            if best_cost is None or cost < best_cost:
+                best, best_cost = key, cost
+        assert best is not None, "no valid entries to search"
+        return best
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +91,7 @@ class PTTConfig:
         return self.layout.widths()
 
 
-class PTT:
+class PTT(EMASearchMixin):
     """Runtime Performance Trace Table.
 
     ``table[t][c, wi]`` is the EMA'd execution time of task type ``t``
@@ -105,11 +134,7 @@ class PTT:
                elapsed: float) -> None:
         wi = self._w2i[width]
         old = self._tab[task_type, leader, wi]
-        # An untrained entry adopts the first sample directly; EMA from zero
-        # would take ~10 samples to converge while the entry no longer reads
-        # as "untrained".
-        self._tab[task_type, leader, wi] = (
-            elapsed if old == 0.0 else _ema(old, elapsed))
+        self._tab[task_type, leader, wi] = self.ema_merge(old, elapsed)
         self.updates += 1
 
     # -- searches (paper §3.3) ---------------------------------------------
@@ -123,34 +148,30 @@ class PTT:
         this — queue-inflated samples push the search to narrower widths
         under load, so width adapts to load automatically)."""
         tab = self._tab[task_type]
-        best, best_cost = None, math.inf
-        for p in self._places:
-            cost = tab[p.leader, self._w2i[p.width]]
-            if metric == "occupancy":
-                cost = cost * p.width
-            if cost < best_cost:
-                best, best_cost = p, cost
-        assert best is not None
-        return best
+
+        def entries():
+            for p in self._places:
+                cost = tab[p.leader, self._w2i[p.width]]
+                yield p, cost * p.width if metric == "occupancy" else cost
+
+        return self.argmin_search(entries())
 
     def local_search(self, task_type: int, core: int) -> Place:
         """Best width keeping the task in partitions containing ``core``
         (non-critical tasks: avoid migration, only avoid oversubscription)."""
         tab = self._tab[task_type]
         cl = self.cfg.layout
-        best, best_cost = None, math.inf
-        for w in cl.widths():
-            try:
-                p = cl.place_of(core, w)
-            except ValueError:
-                continue
-            if core not in p:
-                continue
-            cost = tab[p.leader, self._w2i[p.width]] * p.width
-            if cost < best_cost:
-                best, best_cost = p, cost
-        assert best is not None
-        return best
+
+        def entries():
+            for w in cl.widths():
+                try:
+                    p = cl.place_of(core, w)
+                except ValueError:
+                    continue
+                if core in p:
+                    yield p, tab[p.leader, self._w2i[p.width]] * p.width
+
+        return self.argmin_search(entries())
 
     def snapshot(self) -> np.ndarray:
         return self._tab[:, :, : self._nw].copy()

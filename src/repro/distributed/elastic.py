@@ -31,7 +31,7 @@ import numpy as np
 import jax
 
 from ..core.places import ClusterLayout, homogeneous_layout
-from ..core.ptt import PTT, PTTConfig
+from ..core.ptt import EMASearchMixin, PTT, PTTConfig
 
 
 # ---------------------------------------------------------------------------
@@ -55,10 +55,15 @@ class RooflineLatencyModel:
         with open(path) as f:
             rec = json.load(f)
         r = rec["roofline"]
-        w0 = 16
+        # anchor at the mesh the artifact was actually compiled for; 16 is
+        # only a fallback for artifacts predating the "chips" record
+        w0 = int(rec.get("chips") or 16)
+        # a single-chip artifact carries no collective-scaling information
+        # (its ring term is identically zero) — don't divide by the ~0
+        # anchor fraction
+        t_coll = (r["t_collective"] / ((w0 - 1) / w0)) if w0 > 1 else 0.0
         return cls(t_scale=(r["t_compute"] + r["t_memory"]) * w0,
-                   t_fixed=0.0, t_coll=r["t_collective"] /
-                   max(1e-9, (w0 - 1) / w0), anchor_width=w0)
+                   t_fixed=0.0, t_coll=t_coll, anchor_width=w0)
 
     def latency(self, width: int) -> float:
         w = max(1, width)
@@ -69,33 +74,37 @@ class RooflineLatencyModel:
 # pod-scale PTT
 # ---------------------------------------------------------------------------
 
-class PodPTT:
+class PodPTT(PTT):
     """PTT over device groups.  Task types index request/step classes
-    (e.g. prefill length buckets, decode, train-microbatch)."""
+    (e.g. prefill length buckets, decode, train-microbatch).  A thin
+    :class:`~repro.core.ptt.PTT` subclass — one homogeneous cluster of
+    groups — so the EMA/search math lives in exactly one place
+    (:class:`~repro.core.ptt.EMASearchMixin`)."""
 
     def __init__(self, num_groups: int, num_task_types: int):
         layout = homogeneous_layout(num_groups)
-        self.ptt = PTT(PTTConfig(layout=layout, num_task_types=num_task_types))
+        super().__init__(PTTConfig(layout=layout,
+                                   num_task_types=num_task_types))
         self.layout = layout
         self.last_update = np.zeros(num_groups)
 
     def record(self, task_type: int, leader: int, width: int, elapsed: float,
                now: float) -> None:
-        self.ptt.update(task_type, leader, width, elapsed)
+        self.update(task_type, leader, width, elapsed)
         self.last_update[leader:leader + width] = now
 
     def place_critical(self, task_type: int, metric: str = "occupancy"):
-        return self.ptt.global_search(task_type, metric=metric)
+        return self.global_search(task_type, metric=metric)
 
     def width_local(self, task_type: int, group: int):
-        return self.ptt.local_search(task_type, group)
+        return self.local_search(task_type, group)
 
 
 # ---------------------------------------------------------------------------
 # straggler-aware data parallelism
 # ---------------------------------------------------------------------------
 
-class StragglerRebalancer:
+class StragglerRebalancer(EMASearchMixin):
     """EMA-1:4 per-group step times -> proportional microbatch allocation.
 
     With per-group time t_i for one microbatch, assigning n_i ~ 1/t_i
@@ -120,9 +129,7 @@ class StragglerRebalancer:
     def observe(self, group_times: np.ndarray) -> None:
         """group_times: wall time of each group's current allocation."""
         per_mb = group_times / np.maximum(self.alloc, 1)
-        untrained = self.t_ema == 0
-        self.t_ema = np.where(untrained, per_mb,
-                              (4 * self.t_ema + per_mb) / 5)
+        self.t_ema = self.ema_merge(self.t_ema, per_mb)
 
     def makespan(self, alloc: np.ndarray) -> float:
         return float(np.max(alloc * self.t_ema))

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
-from ..distributed.sharding import constrain, current_rules
+from ..distributed.sharding import constrain, current_rules, shard_map_compat
 from . import layers as L
 
 
@@ -206,9 +206,8 @@ def moe_ep(cfg: ModelConfig, p, x) -> jax.Array:
     }
 
     body = partial(_moe_ep_local, cfg, n_cols=n_cols, axis=model_ax)
-    fn = jax.shard_map(lambda pp, xx: body(pp, xx), mesh=mesh,
-                       in_specs=(pspec_p, pspec_x), out_specs=pspec_x,
-                       check_vma=False)
+    fn = shard_map_compat(lambda pp, xx: body(pp, xx), mesh=mesh,
+                          in_specs=(pspec_p, pspec_x), out_specs=pspec_x)
     return fn(p, x)
 
 

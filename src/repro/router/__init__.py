@@ -1,0 +1,18 @@
+"""Fleet router: PTT-driven multi-replica serving gateway (see README.md).
+
+The paper's scheduler at its third scale — cores -> device groups ->
+serving replicas — with interference detection and SLO-aware admission.
+"""
+
+from .admission import Admission, AdmissionController, SLOPolicy
+from .fleet_ptt import FleetPTT
+from .gateway import FleetGateway
+from .interference import InterferenceConfig, InterferenceDetector
+from .router import FleetRouter, RouteDecision
+
+__all__ = [
+    "Admission", "AdmissionController", "SLOPolicy",
+    "FleetPTT", "FleetGateway",
+    "InterferenceConfig", "InterferenceDetector",
+    "FleetRouter", "RouteDecision",
+]

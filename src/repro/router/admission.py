@@ -1,0 +1,93 @@
+"""SLO-aware admission control.
+
+Per request class an SLO gives the TTFT budget.  The admission decision
+compares the FleetPTT's *predicted* TTFT on the chosen replica (learned
+service estimate x queue backlog) against that budget:
+
+* predicted <= slo            -> ADMIT (route now)
+* predicted <= patience x slo -> QUEUE (hold at the gateway; predictions
+                                 improve as replicas drain or recover)
+* otherwise                   -> SHED  (fail fast rather than serve a
+                                 response that's already blown its budget)
+
+Untrained PTT entries predict 0.0, so bootstrap traffic is always admitted
+— the same optimism that makes the paper's untrained entries globally
+optimal until visited.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+from ..serve.scheduler import RequestClass
+
+
+class Admission(enum.Enum):
+    ADMIT = "admit"
+    QUEUE = "queue"
+    SHED = "shed"
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOPolicy:
+    ttft: dict[RequestClass, float]
+    patience: float = 3.0           # queue head-room as a multiple of slo
+
+    @classmethod
+    def default(cls) -> "SLOPolicy":
+        return cls(ttft={RequestClass.PREFILL_SHORT: 0.5,
+                         RequestClass.PREFILL_LONG: 2.0,
+                         RequestClass.DECODE: 4.0})
+
+    @classmethod
+    def unlimited(cls) -> "SLOPolicy":
+        """No shedding/queueing — for baselines and A/B comparisons."""
+        inf = float("inf")
+        return cls(ttft={c: inf for c in RequestClass})
+
+
+class AdmissionController:
+    """Counters track each request's *current* outcome: ``decide`` counts a
+    first-time decision; a gateway re-evaluating a held request uses
+    ``evaluate`` (pure) and moves the count with ``reclassify`` when the
+    outcome changes, so sustained queuing doesn't inflate the stats."""
+
+    def __init__(self, policy: SLOPolicy | None = None):
+        self.policy = policy or SLOPolicy.default()
+        self.admitted = {c: 0 for c in RequestClass}
+        self.queued = {c: 0 for c in RequestClass}
+        self.shed = {c: 0 for c in RequestClass}
+
+    def evaluate(self, req_class: RequestClass,
+                 predicted_ttft: float) -> Admission:
+        slo = self.policy.ttft[req_class]
+        if predicted_ttft <= slo:
+            return Admission.ADMIT
+        if predicted_ttft <= self.policy.patience * slo:
+            return Admission.QUEUE
+        return Admission.SHED
+
+    def _bucket(self, a: Admission) -> dict[RequestClass, int]:
+        return {Admission.ADMIT: self.admitted, Admission.QUEUE: self.queued,
+                Admission.SHED: self.shed}[a]
+
+    def count(self, req_class: RequestClass, action: Admission) -> None:
+        """Record an outcome decided outside ``decide`` (e.g. a probe
+        dispatch that bypasses the SLO check)."""
+        self._bucket(action)[req_class] += 1
+
+    def decide(self, req_class: RequestClass,
+               predicted_ttft: float) -> Admission:
+        a = self.evaluate(req_class, predicted_ttft)
+        self.count(req_class, a)
+        return a
+
+    def reclassify(self, req_class: RequestClass, frm: Admission,
+                   to: Admission) -> None:
+        self._bucket(frm)[req_class] -= 1
+        self._bucket(to)[req_class] += 1
+
+    def counts(self) -> dict[str, dict[RequestClass, int]]:
+        return {"admitted": dict(self.admitted), "queued": dict(self.queued),
+                "shed": dict(self.shed)}

@@ -1,0 +1,111 @@
+"""FleetPTT — the Performance Trace Table at fleet scale.
+
+Third instantiation of the paper's data structure: cores (`core/ptt.py`) ->
+device groups (`distributed/elastic.py`) -> serving replicas.  Indexed by
+(request class, replica) with two latency rows per cell:
+
+* **TTFT** — time-to-first-token of requests routed to that replica; the
+  signal for the router's *global* search (critical traffic);
+* **TPOT** — time-per-output-token (engine decode-step latency); the
+  signal for *sticky* search (non-critical, decode-heavy traffic).
+
+Math (EMA-1:4 with zero-bootstrap, argmin where untrained entries win) is
+inherited from :class:`repro.core.ptt.EMASearchMixin` — there is exactly one
+implementation across the three scales.  There is no width axis here: a
+replica is an opaque serving unit (its internal width elasticity is the
+:class:`~repro.serve.scheduler.ElasticServeScheduler`'s job).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from ..core.ptt import EMASearchMixin
+
+
+class FleetPTT(EMASearchMixin):
+    """``value(c, r, m)`` is the EMA'd latency of request class ``c`` on
+    replica ``r`` for metric ``m``; 0.0 = untrained (visited first)."""
+
+    TTFT = 0
+    TPOT = 1
+    NUM_METRICS = 2
+
+    def __init__(self, num_replicas: int, num_classes: int):
+        if num_replicas < 1:
+            raise ValueError("need at least one replica")
+        self.num_replicas = num_replicas
+        self.num_classes = num_classes
+        self._tab = np.zeros((num_classes, num_replicas, self.NUM_METRICS),
+                             dtype=np.float64)
+        self.updates = 0
+
+    # -- views -------------------------------------------------------------
+    def value(self, req_class: int, replica: int, metric: int = TTFT) -> float:
+        return float(self._tab[req_class, replica, metric])
+
+    def table(self, req_class: int, metric: int = TTFT) -> np.ndarray:
+        return self._tab[req_class, :, metric].copy()
+
+    def trained(self, req_class: int, replica: int,
+                metric: int = TTFT) -> bool:
+        return self._tab[req_class, replica, metric] != 0.0
+
+    # -- update ------------------------------------------------------------
+    def update(self, req_class: int, replica: int, metric: int,
+               sample: float) -> None:
+        old = self._tab[req_class, replica, metric]
+        self._tab[req_class, replica, metric] = self.ema_merge(old, sample)
+        self.updates += 1
+
+    # -- searches ----------------------------------------------------------
+    def _candidates(self, healthy: Iterable[int] | None) -> Sequence[int]:
+        return (range(self.num_replicas) if healthy is None
+                else tuple(healthy))
+
+    def global_search(self, req_class: int, metric: int = TTFT,
+                      healthy: Iterable[int] | None = None,
+                      backlog: Sequence[int] | None = None) -> int:
+        """Min-predicted-latency replica over the healthy set (critical
+        traffic; the fleet analogue of the paper's global PTT search).
+        With ``backlog`` the cost is queue-inflated and ties (notably the
+        all-untrained bootstrap) break toward the shortest queue."""
+        tab = self._tab[req_class, :, metric]
+
+        def cost(r: int):
+            b = backlog[r] if backlog is not None else 0
+            return (tab[r] * (1 + b), b)
+
+        return self.argmin_search((r, cost(r))
+                                  for r in self._candidates(healthy))
+
+    def sticky_search(self, req_class: int, replica: int, metric: int = TPOT,
+                      healthy: Iterable[int] | None = None,
+                      migrate_ratio: float = 2.0) -> int:
+        """Stay on ``replica`` unless it is unhealthy or the best healthy
+        replica beats it by more than ``migrate_ratio`` (non-critical
+        traffic: avoid migration, only avoid disasters — the fleet analogue
+        of the paper's local search)."""
+        cand = self._candidates(healthy)
+        best = self.global_search(req_class, metric, cand)
+        if replica not in cand:
+            return best
+        if not (self.trained(req_class, replica, metric)
+                and self.trained(req_class, best, metric)):
+            return replica                  # untrained: stay (bootstrap
+                                            # happens via routed traffic)
+        here = self._tab[req_class, replica, metric]
+        there = self._tab[req_class, best, metric]
+        return best if here > migrate_ratio * there else replica
+
+    # -- admission signal --------------------------------------------------
+    def predict_ttft(self, req_class: int, replica: int,
+                     backlog: int = 0) -> float:
+        """Predicted TTFT if routed to ``replica`` with ``backlog`` requests
+        already ahead of it: the learned service estimate inflated by the
+        queue.  Untrained entries predict 0.0 — optimistic, so bootstrap
+        traffic is always admitted."""
+        est = self._tab[req_class, replica, self.TTFT]
+        return float(est * (1 + backlog))

@@ -1,0 +1,159 @@
+"""FleetGateway — front N in-process :class:`ServeEngine` replicas with a
+:class:`FleetRouter`.
+
+The gateway is the glue between router policy and engine mechanics:
+
+* ``submit`` classifies + routes each request (or queues/sheds it per the
+  admission decision) and stamps its arrival time;
+* ``pump`` retries gateway-queued requests, steps every engine once, and
+  harvests TTFT observations: client-facing TTFT (arrival -> first token,
+  including gateway queue time) for ``ttfts()``, dispatch -> first token
+  for the FleetPTT so admission's backlog term doesn't double-count
+  queueing;
+* each engine's ``on_step_latency`` hook feeds the router's interference
+  detector, so a replica that suddenly slows down (co-tenant, thermal,
+  link degradation) is quarantined and drained without any platform
+  knowledge — the paper's core claim, at fleet scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Sequence
+
+from ..serve.engine import Request, ServeEngine
+from .admission import Admission
+from .router import FleetRouter, RouteDecision
+
+
+@dataclasses.dataclass
+class _Tracked:
+    req: Request
+    replica: int
+    req_class: int
+    t_arrival: float         # gateway arrival: client-facing TTFT includes
+                             # time spent QUEUE'd at the gateway
+    t_dispatch: float        # engine submit: the PTT trains on dispatch->
+                             # first-token so predict_ttft's (1+backlog)
+                             # term doesn't double-count queueing
+    ttft: float | None = None
+
+
+class FleetGateway:
+    MAX_REQUEUES = 50        # a QUEUE'd request is shed after this many
+                             # failed re-admissions (SLO unreachable)
+    TTFT_CAP = 100_000       # per-request TTFTs retained (oldest evicted)
+    SHED_CAP = 10_000        # shed requests retained for inspection
+
+    def __init__(self, engines: Sequence[ServeEngine],
+                 router: FleetRouter | None = None, clock=time.perf_counter):
+        if not engines:
+            raise ValueError("need at least one engine")
+        self.engines = list(engines)
+        self.router = router or FleetRouter(len(engines))
+        self.clock = clock
+        # only requests still in flight are tracked; finished ones fold
+        # into counters and capped collections so a long-lived gateway
+        # stays bounded
+        self.tracked: list[_Tracked] = []
+        # (request, affinity, requeue count, arrival time)
+        self.held: deque[tuple[Request, int | None, int, float]] = deque()
+        self.shed: deque[Request] = deque(maxlen=self.SHED_CAP)
+        self._ttfts: dict[int, float] = {}
+        self._served = 0
+        self._per_replica = [0] * len(self.engines)
+        for i, e in enumerate(self.engines):
+            e.on_step_latency = (
+                lambda dt, _r=i: self.router.record_step(_r, dt))
+
+    # -- ingress -----------------------------------------------------------
+    def backlog(self) -> list[int]:
+        return [e.pending() + e.active_count() for e in self.engines]
+
+    def submit(self, req: Request,
+               affinity: int | None = None) -> RouteDecision:
+        t_arrival = self.clock()
+        d = self.router.route(len(req.prompt), req.max_new,
+                              affinity=affinity, backlog=self.backlog())
+        if d.action is Admission.ADMIT:
+            self._dispatch(req, d, t_arrival)
+        elif d.action is Admission.QUEUE:
+            self.held.append((req, affinity, 0, t_arrival))
+        else:
+            self.shed.append(req)
+        return d
+
+    def _dispatch(self, req: Request, d: RouteDecision,
+                  t_arrival: float) -> None:
+        self.tracked.append(_Tracked(req=req, replica=d.replica,
+                                     req_class=int(d.req_class),
+                                     t_arrival=t_arrival,
+                                     t_dispatch=self.clock()))
+        self._per_replica[d.replica] += 1
+        self.engines[d.replica].submit(req)
+
+    # -- pump --------------------------------------------------------------
+    def _retry_held(self) -> None:
+        adm = self.router.admission
+        for _ in range(len(self.held)):
+            req, affinity, tries, t_arrival = self.held.popleft()
+            d = self.router.route(len(req.prompt), req.max_new,
+                                  affinity=affinity, backlog=self.backlog(),
+                                  requeue=True)
+            if d.action is Admission.ADMIT:
+                adm.reclassify(d.req_class, Admission.QUEUE, Admission.ADMIT)
+                self._dispatch(req, d, t_arrival)
+            elif d.action is Admission.QUEUE and tries < self.MAX_REQUEUES:
+                self.held.append((req, affinity, tries + 1, t_arrival))
+            else:
+                adm.reclassify(d.req_class, Admission.QUEUE, Admission.SHED)
+                self.shed.append(req)
+
+    def pump(self) -> int:
+        """One gateway iteration: retry queued, step every engine, harvest
+        TTFTs.  Returns the number of sequences still active fleet-wide."""
+        self._retry_held()
+        active = 0
+        for e in self.engines:
+            active += e.step()
+        in_flight = []
+        for t in self.tracked:
+            if t.ttft is None and t.req.out_tokens:
+                # the engine stamps first-token time at prefill, so the
+                # sample is exact — not inflated by the rest of the wave,
+                # the batch decode, or other engines' steps this pump
+                tok = (t.req.t_first if t.req.t_first is not None
+                       else self.clock())
+                t.ttft = tok - t.t_arrival
+                if len(self._ttfts) >= self.TTFT_CAP:    # evict oldest
+                    self._ttfts.pop(next(iter(self._ttfts)))
+                self._ttfts[t.req.rid] = t.ttft
+                self.router.record_ttft(t.replica, t.req_class,
+                                        tok - t.t_dispatch)
+            if t.req.done and t.ttft is not None:
+                self._served += 1       # finished: stop tracking it
+            else:
+                in_flight.append(t)
+        self.tracked = in_flight
+        return active
+
+    def run_until_drained(self, max_steps: int = 10000) -> None:
+        for _ in range(max_steps):
+            if (self.pump() == 0 and not self.held
+                    and not any(e.pending() for e in self.engines)):
+                return
+
+    # -- results -----------------------------------------------------------
+    def ttfts(self) -> dict[int, float]:
+        return dict(self._ttfts)
+
+    def stats(self) -> dict:
+        s = self.router.stats()
+        s["served"] = self._served
+        s["shed_requests"] = [r.rid for r in self.shed]
+        s["per_replica"] = list(self._per_replica)
+        s["utilization"] = [round(e.utilization(), 3) for e in self.engines]
+        s["step_latency"] = [e.last_step_latency for e in self.engines]
+        return s

@@ -1,0 +1,141 @@
+"""FleetRouter — PTT-driven routing decisions across serving replicas.
+
+The paper's critical/non-critical split, one level above the pod:
+
+* **TTFT-critical** requests (prefill classes) search the FleetPTT globally
+  over the healthy replica set for minimum predicted TTFT;
+* **decode-heavy** requests stick to their affinity replica (a session's
+  previous home) unless it is quarantined or another replica is decisively
+  faster — migration avoidance, exactly the paper's local search;
+* quarantined replicas receive occasional **probe** traffic so their PTT
+  rows (and the detector's fast EMA) keep training — the fleet analogue of
+  "non-critical tasks keep training the PTT on interfered cores" (Fig. 8)
+  — and are re-admitted when the fast EMA recovers;
+* the admission controller sheds or queues per class when the predicted
+  TTFT blows the class SLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from ..serve.scheduler import RequestClass, classify_request
+from .admission import Admission, AdmissionController, SLOPolicy
+from .fleet_ptt import FleetPTT
+from .interference import InterferenceConfig, InterferenceDetector
+
+
+@dataclasses.dataclass
+class RouteDecision:
+    replica: int | None              # None iff action is SHED/QUEUE
+    req_class: RequestClass
+    action: Admission
+    predicted_ttft: float
+    probe: bool = False              # sacrificial probe of a quarantined
+                                     # replica (bypasses admission)
+
+
+class FleetRouter:
+    def __init__(self, num_replicas: int, slo: SLOPolicy | None = None,
+                 interference: InterferenceConfig | None = None,
+                 probe_every: int = 4):
+        self.fleet = FleetPTT(num_replicas, num_classes=len(RequestClass))
+        self.detector = InterferenceDetector(
+            num_replicas, interference or InterferenceConfig())
+        self.admission = AdmissionController(slo)
+        self.probe_every = probe_every
+        self._seen = 0
+        self._probe_rr = 0
+
+    # -- routing -----------------------------------------------------------
+    def route(self, prompt_len: int, max_new: int,
+              affinity: int | None = None,
+              backlog: Sequence[int] | None = None,
+              requeue: bool = False) -> RouteDecision:
+        """Pick a replica for one request.  ``backlog``: per-replica count
+        of requests already queued/active (from ``ServeEngine.pending()``);
+        used to inflate the predicted TTFT for admission.  ``requeue``:
+        re-evaluation of an already-QUEUE-counted request — the admission
+        outcome is computed without incrementing the counters (the gateway
+        reclassifies on outcome change)."""
+        c = classify_request(prompt_len, max_new)
+        healthy = self.detector.healthy()
+        quarantined = sorted(self.detector.quarantined)
+
+        # probe: an occasional request visits a quarantined replica so it
+        # can prove recovery — a drained quarantined replica emits no
+        # decode steps, so without probes nothing would ever feed its fast
+        # EMA and it would be excluded forever.  Non-critical traffic
+        # probes at the base cadence; TTFT-critical classes probe 4x more
+        # rarely (a critical probe knowingly sacrifices its SLO, but a
+        # prefill-only workload must still be able to recover capacity).
+        # When ``backlog`` is provided (gateway/sim), only *idle* (drained)
+        # quarantined replicas are probed: at most one outstanding probe
+        # each, so the straggler is never re-loaded while it is still
+        # slow.  A backlog-less caller probes unconditionally — it has no
+        # queue visibility, and never probing would strand its capacity.
+        self._seen += 1
+        cadence = (self.probe_every if c == RequestClass.DECODE
+                   else self.probe_every * 4)
+        if quarantined and self._seen % cadence == 0:
+            idle = [r for r in quarantined
+                    if backlog is None or backlog[r] == 0]
+            if idle:
+                r = idle[self._probe_rr % len(idle)]
+                self._probe_rr += 1
+                if not requeue:      # requeue'd: gateway reclassifies
+                    self.admission.count(c, Admission.ADMIT)
+                return RouteDecision(replica=r, req_class=c,
+                                     action=Admission.ADMIT,
+                                     predicted_ttft=0.0, probe=True)
+
+        if c == RequestClass.DECODE:
+            if affinity is not None:
+                r = self.fleet.sticky_search(c, affinity,
+                                             healthy=healthy or None)
+            else:
+                r = self.fleet.global_search(c, metric=FleetPTT.TPOT,
+                                             healthy=healthy or None,
+                                             backlog=backlog)
+        else:
+            # all replicas quarantined: degrade gracefully, route anyway
+            r = self.fleet.global_search(c, metric=FleetPTT.TTFT,
+                                         healthy=healthy or None,
+                                         backlog=backlog)
+        pred = self.fleet.predict_ttft(c, r,
+                                       backlog[r] if backlog else 0)
+        action = (self.admission.evaluate(c, pred) if requeue
+                  else self.admission.decide(c, pred))
+        return RouteDecision(
+            replica=r if action is Admission.ADMIT else None,
+            req_class=c, action=action, predicted_ttft=pred)
+
+    # -- feedback ----------------------------------------------------------
+    def record_ttft(self, replica: int, req_class: RequestClass,
+                    ttft: float) -> None:
+        """Observed time-to-first-token of a request served on ``replica``,
+        measured from dispatch (client-facing arrival-based TTFT is the
+        gateway's metric; the table needs the dispatch-based figure so
+        ``predict_ttft``'s backlog term doesn't double-count queueing)."""
+        self.fleet.update(int(req_class), replica, FleetPTT.TTFT, ttft)
+
+    def record_step(self, replica: int, latency: float) -> None:
+        """Engine decode-step latency: trains the TPOT row and is the
+        homogeneous per-replica signal the interference detector watches."""
+        self.fleet.update(int(RequestClass.DECODE), replica, FleetPTT.TPOT,
+                          latency)
+        self.detector.observe(replica, latency)
+
+    # -- views -------------------------------------------------------------
+    def healthy(self) -> list[int]:
+        return self.detector.healthy()
+
+    def stats(self) -> dict:
+        n = self.fleet.num_replicas
+        return {"admission": self.admission.counts(),
+                "quarantined": sorted(self.detector.quarantined),
+                "events": list(self.detector.events),
+                "drift": [round(self.detector.drift(r), 3)
+                          for r in range(n)],
+                "ptt_updates": self.fleet.updates}

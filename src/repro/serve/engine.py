@@ -35,6 +35,9 @@ class Request:
     max_new: int
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    t_first: float | None = None   # wall time the first token was produced
+                                   # (stamped at prefill, so fleet TTFT is
+                                   # not inflated by the rest of the wave)
 
 
 class ServeEngine:
@@ -52,10 +55,28 @@ class ServeEngine:
         self.cur_token = np.zeros((max_batch, 1), dtype=np.int32)
         self._decode = jax.jit(
             lambda p, t, pos, c: model.decode(p, t, pos, c))
+        # fleet surface (router/gateway): called with each step's *decode*
+        # latency (admission/prefill excluded — the interference detector
+        # needs a homogeneous per-replica signal, and a wave admission
+        # would read as a latency spike on a healthy replica)
+        self.on_step_latency = None
+        self.last_step_latency = 0.0
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    # -- non-blocking fleet surface ----------------------------------------
+    def pending(self) -> int:
+        """Requests queued but not yet admitted into the batch."""
+        return len(self.queue)
+
+    def active_count(self) -> int:
+        return sum(r is not None for r in self.active)
+
+    def utilization(self) -> float:
+        """Fraction of batch slots occupied (0.0 = idle replica)."""
+        return self.active_count() / self.max_batch
 
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.active) if r is None]
@@ -64,7 +85,7 @@ class ServeEngine:
         # wave admission: the decode path takes a scalar position, so a wave
         # admits equal-prompt-length requests into an empty batch (ragged
         # positions need per-slot pos / paged KV — see DESIGN.md future work)
-        if any(r is not None for r in self.active) or not self.queue:
+        if self.active_count() or not self.queue:
             return
         wave_len = len(self.queue[0].prompt)
         slots = self._free_slots()
@@ -79,6 +100,7 @@ class ServeEngine:
             self.scheduler.record(d, time.perf_counter() - t0,
                                   time.perf_counter())
             req.out_tokens.append(next_tok)
+            req.t_first = time.perf_counter()
             self._merge_cache(slot, cache, len(req.prompt))
             self.active[slot] = req
             self.pos[slot] = len(req.prompt)
@@ -111,7 +133,7 @@ class ServeEngine:
         """One engine iteration: admit + decode one token for the batch.
         Returns number of active sequences."""
         self._admit()
-        n_active = sum(r is not None for r in self.active)
+        n_active = self.active_count()
         if n_active == 0:
             return 0
         t0 = time.perf_counter()
@@ -122,8 +144,8 @@ class ServeEngine:
         logits, self.cache = self._decode(
             self.params, jnp.asarray(self.cur_token), jnp.asarray(pos),
             self.cache)
-        self.scheduler.record(d, time.perf_counter() - t0,
-                              time.perf_counter())
+        decode_elapsed = time.perf_counter() - t0
+        self.scheduler.record(d, decode_elapsed, time.perf_counter())
         toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for i, req in enumerate(self.active):
             if req is None:
@@ -134,6 +156,9 @@ class ServeEngine:
             if len(req.out_tokens) >= req.max_new or self.pos[i] >= self.max_seq - 1:
                 req.done = True
                 self.active[i] = None
+        self.last_step_latency = decode_elapsed
+        if self.on_step_latency is not None:
+            self.on_step_latency(decode_elapsed)
         return n_active
 
     def run_until_drained(self, max_steps: int = 10000) -> None:

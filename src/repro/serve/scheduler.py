@@ -34,6 +34,16 @@ def classify_prefill(prompt_len: int) -> RequestClass:
             else RequestClass.PREFILL_LONG)
 
 
+def classify_request(prompt_len: int, max_new: int) -> RequestClass:
+    """Fleet-level classing of a whole request: generation-dominated
+    requests (more new tokens than prompt) are steady-state/non-critical
+    DECODE traffic; the rest are TTFT-critical prefill classes by length —
+    the paper's critical/non-critical split, one level up."""
+    if max_new > prompt_len:
+        return RequestClass.DECODE
+    return classify_prefill(prompt_len)
+
+
 @dataclasses.dataclass
 class Decision:
     place: Place

@@ -1,0 +1,66 @@
+"""Minimal deterministic stand-in for the optional `hypothesis` dependency.
+
+When the real package is absent, the property tests import this instead of
+erroring at collection: each ``@given`` test runs over ``max_examples``
+pseudo-random draws from a fixed seed — weaker than real shrinking/search,
+but the properties are still exercised.  Only the strategy surface this
+repo's tests use is implemented (integers, floats, lists, tuples).
+"""
+
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        return _Strategy(lambda rng: [elements.example(rng) for _ in
+                                      range(rng.randint(min_size, max_size))])
+
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies_by_name):
+    def deco(fn):
+        def wrapper():
+            # read at call time so @settings works above OR below @given
+            # (above: settings decorates this wrapper after creation)
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples", 20))
+            rng = random.Random(0)
+            for _ in range(n):
+                fn(**{name: s.example(rng)
+                      for name, s in strategies_by_name.items()})
+        # no functools.wraps: pytest must see a zero-arg signature, not the
+        # strategy parameters (it would look for fixtures of those names)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dep: deterministic fallback
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import (KernelType, RandomDAGConfig, chain_dag,
                         generate_random_dag, is_critical_child,

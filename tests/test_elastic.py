@@ -42,7 +42,7 @@ def test_heartbeat_marks_dead():
 def test_serve_scheduler_follows_ptt():
     s = ElasticServeScheduler(num_groups=4)
     # train the table: group 2 fastest for short prefills at width 2
-    for pl in s.ptt.ptt.places:
+    for pl in s.ptt.places:
         fast = pl.leader == 2 and pl.width == 2
         s.ptt.record(int(RequestClass.PREFILL_SHORT), pl.leader, pl.width,
                      0.1 if fast else 1.0, now=0.0)

@@ -1,0 +1,31 @@
+"""Acceptance for the fleet-routing benchmark scenario: PTT routing beats
+round-robin on p99 TTFT by >= 1.5x with an injected straggler, and the
+InterferenceDetector quarantines (then re-admits) the slow replica."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..")))
+
+from benchmarks.fleet_routing import SLOW_REPLICA, simulate  # noqa: E402
+
+
+def test_ptt_beats_round_robin_p99_with_straggler():
+    rr = simulate("rr", n_requests=400, seed=0)
+    ptt = simulate("ptt", n_requests=400, seed=0)
+    assert rr["p99"] / ptt["p99"] >= 1.5, (rr["p99"], ptt["p99"])
+    events = ptt["stats"]["events"]
+    assert ("quarantine", SLOW_REPLICA) in events, events
+    assert ("readmit", SLOW_REPLICA) in events, events
+
+
+def test_admission_sheds_under_overload_but_not_at_capacity():
+    from repro.router import SLOPolicy
+    ok = simulate("ptt", n_requests=400, seed=0, slo=SLOPolicy.default())
+    overload = simulate("ptt", n_requests=400, seed=0,
+                        slo=SLOPolicy.default(), arrival_scale=0.003)
+    assert overload["shed"] > ok["shed"]
+    # shedding keeps served-request p99 in the same decade as the healthy
+    # run instead of letting the queues run away
+    assert overload["p99"] < 10 * ok["p99"]

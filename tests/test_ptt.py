@@ -3,7 +3,10 @@ python<->JAX implementation parity."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dep: deterministic fallback
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import PTT, PTTConfig, ClusterLayout, homogeneous_layout
 from repro.core.ptt import (make_ptt_array, ptt_global_search,

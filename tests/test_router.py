@@ -1,0 +1,302 @@
+"""Fleet router subsystem: FleetPTT search/update, interference quarantine ->
+recover cycle, SLO admission shedding, PTT-scale unification, and an
+end-to-end gateway over two in-process ServeEngine replicas."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core.ptt import EMASearchMixin, PTT
+from repro.distributed.elastic import PodPTT, StragglerRebalancer
+from repro.models import get_model
+from repro.router import (Admission, AdmissionController, FleetGateway,
+                          FleetPTT, FleetRouter, InterferenceConfig,
+                          InterferenceDetector, SLOPolicy)
+from repro.serve import Request, ServeEngine
+from repro.serve.scheduler import RequestClass, classify_request
+
+
+# ---------------------------------------------------------------------------
+# FleetPTT
+# ---------------------------------------------------------------------------
+
+def test_fleet_ptt_ema_matches_paper_rule():
+    f = FleetPTT(num_replicas=4, num_classes=3)
+    f.update(0, 1, FleetPTT.TTFT, 10.0)          # first sample adopted
+    assert f.value(0, 1, FleetPTT.TTFT) == 10.0
+    f.update(0, 1, FleetPTT.TTFT, 5.0)           # (4*10 + 5) / 5
+    assert f.value(0, 1, FleetPTT.TTFT) == pytest.approx(9.0)
+    assert f.updates == 2
+
+
+def test_fleet_ptt_bootstrap_visits_every_replica():
+    f = FleetPTT(num_replicas=5, num_classes=1)
+    seen = set()
+    for _ in range(5):
+        r = f.global_search(0)
+        seen.add(r)
+        f.update(0, r, FleetPTT.TTFT, 1.0 + r)
+    assert seen == set(range(5))                 # untrained entries win first
+
+
+def test_fleet_ptt_global_search_follows_latency():
+    f = FleetPTT(num_replicas=4, num_classes=1)
+    for r in range(4):
+        f.update(0, r, FleetPTT.TTFT, 0.1 if r == 2 else 1.0)
+    assert f.global_search(0) == 2
+    # healthy mask excludes the winner
+    assert f.global_search(0, healthy=[0, 1, 3]) != 2
+
+
+def test_fleet_ptt_sticky_search_avoids_migration():
+    f = FleetPTT(num_replicas=3, num_classes=3)
+    c = int(RequestClass.DECODE)
+    for r, t in enumerate((1.0, 1.5, 0.9)):
+        f.update(c, r, FleetPTT.TPOT, t)
+    # 1.5 vs best 0.9 is < 2x: stay home
+    assert f.sticky_search(c, replica=1) == 1
+    # 10x slower than best: migrate
+    f.update(c, 1, FleetPTT.TPOT, 100.0)
+    f.update(c, 1, FleetPTT.TPOT, 100.0)
+    assert f.sticky_search(c, replica=1) == 2
+    # unhealthy home always migrates
+    assert f.sticky_search(c, replica=0, healthy=[1, 2]) in (1, 2)
+
+
+def test_fleet_ptt_predict_ttft_scales_with_backlog():
+    f = FleetPTT(num_replicas=2, num_classes=1)
+    f.update(0, 0, FleetPTT.TTFT, 0.5)
+    assert f.predict_ttft(0, 0, backlog=0) == pytest.approx(0.5)
+    assert f.predict_ttft(0, 0, backlog=3) == pytest.approx(2.0)
+    assert f.predict_ttft(0, 1, backlog=9) == 0.0    # untrained: optimistic
+
+
+# ---------------------------------------------------------------------------
+# one shared EMA/search implementation across the three PTT scales
+# ---------------------------------------------------------------------------
+
+def test_three_ptt_scales_share_one_ema_implementation():
+    assert issubclass(PTT, EMASearchMixin)
+    assert issubclass(PodPTT, EMASearchMixin)
+    assert issubclass(FleetPTT, EMASearchMixin)
+    assert issubclass(StragglerRebalancer, EMASearchMixin)
+    for cls in (PTT, PodPTT, FleetPTT, StragglerRebalancer):
+        assert cls.ema_merge is EMASearchMixin.ema_merge
+        assert cls.argmin_search is EMASearchMixin.argmin_search
+    # scalar and array paths agree with the paper's 4:1 rule
+    assert EMASearchMixin.ema_merge(10.0, 5.0) == pytest.approx(9.0)
+    np.testing.assert_allclose(
+        EMASearchMixin.ema_merge(np.array([10.0, 0.0]), np.array([5.0, 3.0])),
+        [9.0, 3.0])
+
+
+# ---------------------------------------------------------------------------
+# InterferenceDetector
+# ---------------------------------------------------------------------------
+
+def test_detector_quarantine_then_recover_cycle():
+    det = InterferenceDetector(num_replicas=3)
+    for _ in range(10):                          # establish baselines
+        for r in range(3):
+            det.observe(r, 1.0)
+    assert det.healthy() == [0, 1, 2]
+    # replica 1 hit by 4x interference: quarantined within a bounded
+    # number of EMA updates (fast EMA at 1:1 crosses 2x baseline fast)
+    updates_to_quarantine = None
+    for i in range(10):
+        if det.observe(1, 4.0) == "quarantine":
+            updates_to_quarantine = i + 1
+            break
+    assert updates_to_quarantine is not None and updates_to_quarantine <= 4
+    assert det.healthy() == [0, 2]
+    assert not det.is_healthy(1)
+    # interference ends; probe samples recover the fast EMA -> re-admitted
+    updates_to_readmit = None
+    for i in range(16):
+        if det.observe(1, 1.0) == "readmit":
+            updates_to_readmit = i + 1
+            break
+    assert updates_to_readmit is not None and updates_to_readmit <= 8
+    assert det.healthy() == [0, 1, 2]
+    assert [e[0] for e in det.events] == ["quarantine", "readmit"]
+
+
+def test_detector_baseline_frozen_during_quarantine():
+    det = InterferenceDetector(num_replicas=1)
+    for _ in range(8):
+        det.observe(0, 1.0)
+    base = det.baseline[0]
+    while det.is_healthy(0):
+        det.observe(0, 5.0)
+    for _ in range(20):                          # sustained interference
+        det.observe(0, 5.0)
+    # baseline did not chase the inflated samples (else it would self-heal
+    # the quarantine while the replica is still slow)
+    assert det.baseline[0] == pytest.approx(base)
+    assert not det.is_healthy(0)
+
+
+def test_detector_needs_min_samples():
+    det = InterferenceDetector(num_replicas=1,
+                               cfg=InterferenceConfig(min_samples=4))
+    assert det.observe(0, 1.0) is None
+    assert det.observe(0, 99.0) is None          # too early to judge
+
+
+def test_detector_ignores_single_spike():
+    det = InterferenceDetector(num_replicas=1)
+    for _ in range(10):
+        det.observe(0, 1.0)
+    # one GC-pause-style outlier is noise, not interference
+    assert det.observe(0, 50.0) is None
+    assert det.is_healthy(0)
+    det.observe(0, 1.0)                          # drift run resets
+    for _ in range(6):
+        det.observe(0, 1.0)
+    assert det.is_healthy(0)
+    # but a *sustained* drift still quarantines
+    assert det.observe(0, 50.0) is None
+    assert det.observe(0, 50.0) == "quarantine"
+
+
+# ---------------------------------------------------------------------------
+# AdmissionController
+# ---------------------------------------------------------------------------
+
+def test_admission_sheds_under_synthetic_overload():
+    adm = AdmissionController(SLOPolicy(
+        ttft={RequestClass.PREFILL_SHORT: 0.5,
+              RequestClass.PREFILL_LONG: 2.0,
+              RequestClass.DECODE: 4.0}, patience=3.0))
+    c = RequestClass.PREFILL_SHORT
+    assert adm.decide(c, 0.0) is Admission.ADMIT       # untrained/bootstrap
+    assert adm.decide(c, 0.4) is Admission.ADMIT       # within SLO
+    assert adm.decide(c, 1.0) is Admission.QUEUE       # <= patience * slo
+    assert adm.decide(c, 5.0) is Admission.SHED        # hopeless
+    # overload: backlog-inflated predictions shed short-SLO traffic while
+    # the long-SLO class still queues
+    assert adm.decide(RequestClass.PREFILL_LONG, 5.0) is Admission.QUEUE
+    n = adm.counts()
+    assert n["shed"][c] == 1 and n["admitted"][c] == 2 and n["queued"][c] == 1
+
+
+def test_router_sheds_and_queues_via_predictions():
+    router = FleetRouter(num_replicas=2, slo=SLOPolicy(
+        ttft={RequestClass.PREFILL_SHORT: 0.1,
+              RequestClass.PREFILL_LONG: 1.0,
+              RequestClass.DECODE: 1.0}))
+    # train both replicas hot: 0.09s TTFT for short prefills
+    for r in range(2):
+        router.record_ttft(r, RequestClass.PREFILL_SHORT, 0.09)
+    d = router.route(prompt_len=512, max_new=8, backlog=[0, 0])
+    assert d.action is Admission.ADMIT and d.replica is not None
+    d = router.route(prompt_len=512, max_new=8, backlog=[2, 2])
+    assert d.action is Admission.QUEUE and d.replica is None
+    d = router.route(prompt_len=512, max_new=8, backlog=[50, 50])
+    assert d.action is Admission.SHED
+
+
+# ---------------------------------------------------------------------------
+# FleetRouter policy
+# ---------------------------------------------------------------------------
+
+def test_router_critical_avoids_quarantined_replica():
+    # probe_every=2 -> critical classes probe every 8th request
+    router = FleetRouter(num_replicas=3, slo=SLOPolicy.unlimited(),
+                         probe_every=2)
+    for r in range(3):
+        router.record_ttft(r, RequestClass.PREFILL_SHORT, 0.1)
+        for _ in range(6):
+            router.record_step(r, 0.01)
+    # replica 0 degrades 5x -> detector quarantines it off the step signal
+    for _ in range(6):
+        router.record_step(0, 0.05)
+    assert 0 in router.detector.quarantined
+    decisions = [router.route(prompt_len=512, max_new=8) for _ in range(8)]
+    # regular critical traffic avoids the quarantined replica; only
+    # sacrificial probes (every probe_every-th request) may visit it
+    for d in decisions:
+        if d.probe:
+            assert d.replica == 0
+        else:
+            assert d.replica != 0
+    assert any(d.probe for d in decisions)       # recovery path stays alive
+
+
+def test_router_probes_quarantined_with_noncritical():
+    router = FleetRouter(num_replicas=2, slo=SLOPolicy.unlimited(),
+                         probe_every=2)
+    for r in range(2):
+        for _ in range(6):
+            router.record_step(r, 0.01)
+    for _ in range(6):
+        router.record_step(0, 0.1)
+    assert 0 in router.detector.quarantined
+    # decode-heavy (non-critical) traffic: every 2nd decision probes
+    probes = [router.route(prompt_len=4, max_new=64).probe
+              for _ in range(6)]
+    assert any(probes)
+    # probes route to the quarantined replica; recovery samples re-admit it
+    for _ in range(10):
+        router.record_step(0, 0.01)
+        if router.detector.is_healthy(0):
+            break
+    assert router.detector.is_healthy(0)
+
+
+def test_classify_request_fleet_split():
+    assert classify_request(512, 8) == RequestClass.PREFILL_SHORT
+    assert classify_request(4096, 8) == RequestClass.PREFILL_LONG
+    assert classify_request(16, 256) == RequestClass.DECODE
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: gateway over two real in-process engines
+# ---------------------------------------------------------------------------
+
+def test_gateway_end_to_end_two_replicas():
+    cfg = get_config("smollm-135m", reduced=True)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    engines = [ServeEngine(m, params, max_batch=2, max_seq=24)
+               for _ in range(2)]
+    gw = FleetGateway(engines)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 6), max_new=4)
+            for i in range(6)]
+    for r in reqs:
+        d = gw.submit(r)
+        assert d.action is Admission.ADMIT       # untrained PTT admits all
+    gw.run_until_drained(max_steps=300)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out_tokens) >= 4 for r in reqs)
+    # both replicas saw traffic (bootstrap spreads over untrained entries)
+    per_replica = gw.stats()["per_replica"]
+    assert sorted(per_replica) != [0, len(reqs)], per_replica
+    # the FleetPTT learned TTFT and TPOT rows from real execution
+    assert len(gw.ttfts()) == len(reqs)
+    assert gw.router.fleet.updates > len(reqs)
+    assert gw.router.detector.samples.sum() > 0
+
+
+def test_gateway_sheds_when_slo_unreachable():
+    cfg = get_config("smollm-135m", reduced=True)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(1))
+    engines = [ServeEngine(m, params, max_batch=2, max_seq=24)]
+    slo = SLOPolicy(ttft={RequestClass.PREFILL_SHORT: 1e-9,
+                          RequestClass.PREFILL_LONG: 1e-9,
+                          RequestClass.DECODE: 1e-9}, patience=1.0)
+    gw = FleetGateway(engines, router=FleetRouter(1, slo=slo))
+    rng = np.random.default_rng(2)
+    first = Request(rid=0, prompt=rng.integers(0, cfg.vocab, 6), max_new=2)
+    gw.submit(first)                             # bootstrap: predicted 0.0
+    gw.run_until_drained(max_steps=100)
+    assert first.done
+    # PTT now trained; an impossible SLO with backlog must shed
+    blocked = Request(rid=1, prompt=rng.integers(0, cfg.vocab, 6), max_new=2)
+    d = gw.submit(blocked)
+    assert d.action is Admission.SHED
+    assert blocked in gw.shed

@@ -4,7 +4,10 @@ speedup claims (Fig. 5-7), interference adaptation (Fig. 8), VGG scaling
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dep: deterministic fallback
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import (HomogeneousScheduler, KernelType,
                         PerformanceBasedScheduler, RandomDAGConfig,

@@ -50,4 +50,4 @@ def test_engine_waves_and_queueing():
     assert all(r.done for r in reqs)
     assert all(len(r.out_tokens) >= 4 for r in reqs)
     # the PTT saw both prefill (critical) and decode (non-critical) updates
-    assert engine.scheduler.ptt.ptt.updates > len(reqs)
+    assert engine.scheduler.ptt.updates > len(reqs)

@@ -46,7 +46,9 @@ def test_multi_axis_batch(subproc):
                          axis_types=(jax.sharding.AxisType.Auto,)*3)
     r = AxisRules(mesh, dict(DEFAULT_RULES))
     assert r.spec(("batch", None), (8, 4)) == P(("pod", "data"), None)
-    # batch=2 divides pod only -> prefix fallback
-    assert r.spec(("batch", None), (2, 4)) == P(("pod",), None)
+    # batch=2 divides pod only -> prefix fallback (spec() emits a bare
+    # axis for singleton tuples; older jax P() doesn't equate the two)
+    spec = r.spec(("batch", None), (2, 4))
+    assert spec in (P(("pod",), None), P("pod", None))
     print("OK")
     """, devices=8)
