@@ -17,7 +17,10 @@ Policies:
 
 Metric: p50/p99 TTFT over the stream.  Acceptance target: PTT beats
 round-robin on p99 by >= 1.5x.  A second scenario runs the PTT policy with
-tight SLOs under overload and reports the shed fraction per class.
+tight SLOs under overload and reports the shed fraction per class.  A third
+(:func:`migration_demo`) drives REAL engines: a 2-replica gateway with a
+mid-stream quarantine must empty the victim by live-migrating its decode
+sessions — the paged-KV-session path, smoked on every CI run.
 """
 
 from __future__ import annotations
@@ -107,7 +110,10 @@ def simulate(policy: str, n_requests: int = 800, seed: int = 0,
         if not follow:
             last_replica = r
         if policy == "ptt":
-            router.record_ttft(r, int(d.req_class), ttft)
+            # TTFT rows are size-normalized (per prompt token): record_ttft
+            # divides by prompt_len, predict_ttft scales back — short/long
+            # prefills stop polluting one class row
+            router.record_ttft(r, int(d.req_class), ttft, prompt_len=plen)
             # homogeneous per-replica signal: service time normalized by
             # request size (what engine step latency gives the gateway);
             # record_step trains the DECODE TPOT row sticky_search reads
@@ -118,6 +124,53 @@ def simulate(policy: str, n_requests: int = 800, seed: int = 0,
             "p99": float(np.percentile(t, 99)),
             "mean": float(t.mean()), "shed": shed, "n": len(t),
             "stats": router.stats() if policy == "ptt" else None}
+
+
+def migration_demo(quick: bool = False) -> dict:
+    """Live-migration smoke over REAL engines: a 2-replica FleetGateway on
+    a tiny model, one replica quarantined mid-stream; the gateway must
+    empty it by migrating its in-flight decode sessions (export_session ->
+    import_session) and every request must still finish.  Exercises the
+    whole paged-session path — model slice helpers, ragged admission,
+    router drain — on every CI run."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.router import FleetGateway
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_config("smollm-135m", reduced=True)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    engines = [ServeEngine(m, params, max_batch=2, max_seq=48)
+               for _ in range(2)]
+    gw = FleetGateway(engines)
+    rng = np.random.default_rng(0)
+    n = 4 if quick else 6
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 6), max_new=12)
+            for i in range(n)]
+    for r in reqs:
+        gw.submit(r)
+    for _ in range(3):                 # let decode sessions get in flight
+        gw.pump()
+    # force the quarantine (the detector's own trigger path is unit-tested;
+    # this exercises the drain/migration machinery end-to-end)
+    victim = max(range(2), key=lambda i: engines[i].active_count())
+    gw.router.detector.force_quarantine(victim)
+    gw.pump()
+    drained = (engines[victim].active_count() == 0
+               and not engines[victim].sessions_in)
+    gw.run_until_drained(max_steps=1000)
+    st = gw.stats()
+    assert all(r.done for r in reqs), "migrated requests must finish"
+    # a silently broken migration path must FAIL the smoke, not just
+    # report migrations=0 (the quarantined engine would still finish the
+    # work by itself)
+    assert drained, "quarantined replica still held sessions after drain"
+    assert st["migrations"] >= 1, "no session was migrated"
+    return {"migrations": st["migrations"], "drained": drained,
+            "victim": victim, "served": st["served"]}
 
 
 def main(quick: bool = False) -> None:
@@ -138,6 +191,10 @@ def main(quick: bool = False) -> None:
     row("fleet_routing_admission", 1e6 * tight["mean"],
         f"shed_frac={tight['shed']/(tight['shed']+tight['n']):.2f};"
         f"p99={tight['p99']:.3f}s")
+    mig = migration_demo(quick=quick)
+    row("fleet_routing_migration", 0.0,
+        f"migrations={mig['migrations']};drained={mig['drained']};"
+        f"victim={mig['victim']};served={mig['served']}")
 
 
 if __name__ == "__main__":

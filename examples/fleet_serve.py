@@ -38,7 +38,7 @@ def main() -> None:
         print(f"  req {rid}: {ttft:.3f}")
     st = gw.stats()
     print(f"\nserved={st['served']} per_replica={st['per_replica']} "
-          f"quarantined={st['quarantined']}")
+          f"quarantined={st['quarantined']} migrations={st['migrations']}")
     fleet = gw.router.fleet
     print(f"fleet PTT updates: {fleet.updates}")
     print("TTFT rows (class x replica):")

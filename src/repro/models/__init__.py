@@ -6,8 +6,16 @@ Every family module provides::
     forward(cfg, p, batch)-> logits                  (training compute)
     prefill(cfg, p, batch)-> (last logits, cache)
     decode(cfg, p, token, pos, cache) -> (logits, cache)
+                                         pos: scalar or per-slot (B,) vector
     cache_spec(cfg, B, S) -> pytree of ShapeDtypeStruct
     cache_logical_axes(cfg) -> matching logical-axis tree
+    cache_seq_axes(cfg)   -> axis-index tree: which axis grows with decode
+                             position (None = fixed-size state)
+
+On top of those, every :class:`Model` exposes per-slot session helpers
+(``extract_session`` / ``insert_session``) that slice one sequence's cache
+state out of / into a batch cache — the substrate for ragged continuous
+batching and live session migration between serving replicas.
 """
 
 from __future__ import annotations
@@ -15,8 +23,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable
 
+import jax
+
 from ..configs.base import ModelConfig
-from . import jamba, mamba2, moe, transformer, vlm
+from . import jamba, mamba2, moe, sessions, transformer, vlm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,8 +36,15 @@ class Model:
     forward: Callable
     prefill: Callable
     decode: Callable
+    decode_jit: Callable          # jitted decode owned by this Model: every
+                                  # engine/replica built over it shares one
+                                  # compiled executable, and the executable's
+                                  # lifetime is the Model's (no global cache)
     cache_spec: Callable
     cache_logical_axes: Callable
+    cache_seq_axes: Callable
+    extract_session: Callable     # (cache, slot, pos) -> session dict (numpy)
+    insert_session: Callable      # (cache, slot, session) -> new cache
 
 
 _FAMILY = {
@@ -43,7 +60,21 @@ _FAMILY = {
 def get_model(cfg: ModelConfig) -> Model:
     mod = _FAMILY[cfg.family]
     bind = lambda f: (lambda *a, **kw: f(cfg, *a, **kw))
+
+    def extract_session(cache, slot: int, pos: int):
+        return sessions.extract_session(cache, slot, pos,
+                                        mod.cache_logical_axes(cfg),
+                                        mod.cache_seq_axes(cfg))
+
+    def insert_session(cache, slot: int, session):
+        return sessions.insert_session(cache, slot, session,
+                                       mod.cache_logical_axes(cfg))
+
     return Model(cfg=cfg, init=bind(mod.init), forward=bind(mod.forward),
                  prefill=bind(mod.prefill), decode=bind(mod.decode),
+                 decode_jit=jax.jit(bind(mod.decode)),
                  cache_spec=bind(mod.cache_spec),
-                 cache_logical_axes=bind(mod.cache_logical_axes))
+                 cache_logical_axes=bind(mod.cache_logical_axes),
+                 cache_seq_axes=bind(mod.cache_seq_axes),
+                 extract_session=extract_session,
+                 insert_session=insert_session)

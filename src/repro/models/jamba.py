@@ -211,7 +211,8 @@ def prefill(cfg: ModelConfig, p, batch):
 
 def decode(cfg: ModelConfig, p, token, pos, cache):
     x = L.embed_tokens(cfg, p["tok"], token)
-    positions = jnp.full((x.shape[0], 1), pos)
+    pos = L.position_vector(pos, x.shape[0])   # per-slot ragged positions
+    positions = pos[:, None]
     x, sts = _run(cfg, p, x, positions, cache=cache, pos=pos)
     x = L.apply_norm(p["ln_f"], x, cfg.norm)
     return L.lm_head(cfg, p["tok"], x), _pack_cache(sts)
@@ -246,3 +247,9 @@ def cache_logical_axes(cfg: ModelConfig):
         "ssm_dense": (None, None, "batch", None, None, None),
         "conv_dense": (None, None, "batch", None, "ff"),
     }
+
+
+def cache_seq_axes(cfg: ModelConfig):
+    # only the attention KV grows with position; SSM/conv state is O(1)
+    return {"k": 2, "v": 2, "ssm_moe": None, "conv_moe": None,
+            "ssm_dense": None, "conv_dense": None}

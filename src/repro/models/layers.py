@@ -64,6 +64,16 @@ def apply_norm(p: Params, x: jax.Array, kind: str) -> jax.Array:
 # RoPE
 # ---------------------------------------------------------------------------
 
+def position_vector(pos, batch: int) -> jax.Array:
+    """Normalize a decode position — scalar (shared) or per-slot vector — to
+    an int32 ``(batch,)`` vector.  Ragged continuous batching passes one
+    position per slot; legacy callers pass a scalar."""
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    if pos.shape[0] == batch:
+        return pos
+    return jnp.broadcast_to(pos, (batch,))
+
+
 def rope_frequencies(hd: int, theta: float) -> jax.Array:
     return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
 
@@ -280,7 +290,8 @@ def decode_attention(cfg: ModelConfig, q: jax.Array, k_cache: jax.Array,
     q: (B, 1, Hq, hd); caches: (B, Smax, Hkv, hd) constrained to shard Smax
     over the `model` axis — the softmax max/sum reductions become psums over
     the model axis, i.e. flash-decode's partial-softmax combine, inserted by
-    SPMD partitioning.
+    SPMD partitioning.  ``pos`` is a scalar (shared position) or a (B, 1)
+    per-slot position column (ragged batch: each slot masks independently).
     """
     B, _, Hq, hd = q.shape
     Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
@@ -290,9 +301,10 @@ def decode_attention(cfg: ModelConfig, q: jax.Array, k_cache: jax.Array,
     qr = q.reshape(B, Hkv, rep, hd)
     s = jnp.einsum("bgrh,bsgh->bgrs", qr, k_cache,
                    preferred_element_type=jnp.float32) / math.sqrt(hd)
-    valid = jnp.arange(Smax)[None, :] <= pos               # include current
-    s = jnp.where(valid[:, None, None] if valid.ndim == 2 else
-                  valid[None, None, None], s, -1e30)
+    # include the current position; pos is a scalar or a (B, 1) column, so
+    # valid broadcasts to (1|B, Smax) and aligns with s's (B, g, r, Smax)
+    valid = jnp.arange(Smax)[None, :] <= pos
+    s = jnp.where(valid[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgrs,bsgh->bgrh", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
@@ -312,20 +324,24 @@ def attention_decode_inplace(cfg: ModelConfig, p: Params, x: jax.Array,
     """One-token attention updating the STACKED (L, B, Smax, Hkv, hd) caches
     in place: writes only the (B, 1, Hkv, hd) token slice (a scan carrying
     the full cache aliases these updates, unlike ys-stacking which rewrites
-    a full layer slice per step — see EXPERIMENTS.md §Perf decode entry)."""
+    a full layer slice per step — see EXPERIMENTS.md §Perf decode entry).
+
+    ``pos`` may be a scalar or a per-slot ``(B,)`` vector (ragged continuous
+    batching: every slot decodes at its own position)."""
     cdt = jnp.dtype(cfg.compute_dtype)
     x = x.astype(cdt)
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos)
+    pos_vec = position_vector(pos, B)
+    positions = pos_vec[:, None]
     q, k, v = _qkv(cfg, p, x, x, positions, positions, rope)
-    zero = jnp.zeros((), jnp.int32)
-    kfull = jax.lax.dynamic_update_slice(
-        kfull, k[None].astype(kfull.dtype), (layer_idx, zero, pos, zero, zero))
-    vfull = jax.lax.dynamic_update_slice(
-        vfull, v[None].astype(vfull.dtype), (layer_idx, zero, pos, zero, zero))
+    batch_ix = jnp.arange(B)
+    kfull = kfull.at[layer_idx, batch_ix, pos_vec].set(
+        k[:, 0].astype(kfull.dtype))
+    vfull = vfull.at[layer_idx, batch_ix, pos_vec].set(
+        v[:, 0].astype(vfull.dtype))
     kc = jax.lax.dynamic_index_in_dim(kfull, layer_idx, 0, keepdims=False)
     vc = jax.lax.dynamic_index_in_dim(vfull, layer_idx, 0, keepdims=False)
-    out = decode_attention(cfg, q, kc.astype(cdt), vc.astype(cdt), pos)
+    out = decode_attention(cfg, q, kc.astype(cdt), vc.astype(cdt), positions)
     out = out @ p["wo"].astype(cdt)
     return constrain(out, "batch", None, None), kfull, vfull
 
@@ -344,13 +360,16 @@ def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array, *,
     cross = kv_src is not None
     causal = cfg.causal if causal is None else causal
     if mode == "decode" and not cross:
-        # project one token; append handled by caller via returned k,v
+        # project one token; append handled by caller via returned k,v.
+        # pos may be scalar or per-slot (B,): each slot writes and masks at
+        # its own position (ragged continuous batching)
+        B = x.shape[0]
+        pos_vec = position_vector(pos, B)
         q, k, v = _qkv(cfg, p, x, x, positions, positions, rope)
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            k_cache.astype(cdt), k, pos, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            v_cache.astype(cdt), v, pos, axis=1)
-        out = decode_attention(cfg, q, kc, vc, pos)
+        batch_ix = jnp.arange(B)
+        kc = k_cache.astype(cdt).at[batch_ix, pos_vec].set(k[:, 0])
+        vc = v_cache.astype(cdt).at[batch_ix, pos_vec].set(v[:, 0])
+        out = decode_attention(cfg, q, kc, vc, pos_vec[:, None])
         out = out @ p["wo"].astype(cdt)
         return AttnOut(x=constrain(out, "batch", None, None), k=kc, v=vc)
     if mode == "decode" and cross:

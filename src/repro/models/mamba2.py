@@ -305,3 +305,9 @@ def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
 def cache_logical_axes(cfg: ModelConfig):
     return {"ssm": (None, "batch", None, None, None),
             "conv": (None, "batch", None, "ff")}
+
+
+def cache_seq_axes(cfg: ModelConfig):
+    # pure recurrence: state is O(1) in position, nothing to trim — per-slot
+    # decode positions are a no-op for this family
+    return {"ssm": None, "conv": None}

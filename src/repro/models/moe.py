@@ -74,10 +74,11 @@ def _expert_ffn(cfg: ModelConfig, p, xe):
 # dense one-hot dispatch (oracle / decode path)
 # ---------------------------------------------------------------------------
 
-def moe_dense(cfg: ModelConfig, p, x) -> jax.Array:
+def moe_dense(cfg: ModelConfig, p, x, min_capacity: int = 0) -> jax.Array:
     B, S, D = x.shape
     T, E, k = B * S, cfg.n_experts, cfg.top_k
-    cap = max(1, int(math.ceil(T * k * cfg.capacity_factor / E)))
+    cap = max(1, min_capacity,
+              int(math.ceil(T * k * cfg.capacity_factor / E)))
     x2d = x.reshape(T, D)
     vals, idx = _route(cfg, p["router"], x2d)                # (T,k)
     flat_e = idx.reshape(-1)                                 # (T*k,)
@@ -213,8 +214,14 @@ def moe_ep(cfg: ModelConfig, p, x) -> jax.Array:
 
 def moe_apply(cfg: ModelConfig, p, x, *, decode: bool = False) -> jax.Array:
     # decode steps and tiny token counts use the einsum oracle; full
-    # sequences use expert-parallel shard_map dispatch
-    if decode or x.shape[0] * x.shape[1] <= 4096:
+    # sequences use expert-parallel shard_map dispatch.  Decode runs with
+    # no-drop capacity (cap = token count >= worst-case one copy per token
+    # per expert): a slot's output then never depends on which other slots
+    # share the batch, which is what makes session migration between
+    # engines token-identical under greedy decoding.
+    if decode:
+        return moe_dense(cfg, p, x, min_capacity=x.shape[0] * x.shape[1])
+    if x.shape[0] * x.shape[1] <= 4096:
         return moe_dense(cfg, p, x)
     return moe_ep(cfg, p, x)
 
@@ -378,6 +385,7 @@ def prefill(cfg: ModelConfig, p, batch):
 
 def decode(cfg: ModelConfig, p, token, pos, cache):
     x = L.embed_tokens(cfg, p["tok"], token)
+    pos = L.position_vector(pos, x.shape[0])   # per-slot ragged positions
     if cfg.moe_every == 1:
         # in-place token-slice cache update (see transformer.decode)
         def body(carry, xs):
@@ -396,7 +404,7 @@ def decode(cfg: ModelConfig, p, token, pos, cache):
             (p["layers"], jnp.arange(cfg.n_layers)))
         new_cache = {"k": ks, "v": vs}
     else:
-        positions = jnp.full((x.shape[0], 1), pos)
+        positions = pos[:, None]
         x, new_cache = _run_layers(cfg, p, x, positions, collect_kv=True,
                                    cache=cache, pos=pos)
     x = L.apply_norm(p["ln_f"], x, cfg.norm)
@@ -424,3 +432,9 @@ def cache_logical_axes(cfg: ModelConfig):
         return {"k": (None, *ax), "v": (None, *ax)}
     return {"k_dense": (None, None, *ax), "v_dense": (None, None, *ax),
             "k_moe": (None, *ax), "v_moe": (None, *ax)}
+
+
+def cache_seq_axes(cfg: ModelConfig):
+    if cfg.moe_every == 1:
+        return {"k": 2, "v": 2}
+    return {"k_dense": 3, "v_dense": 3, "k_moe": 2, "v_moe": 2}

@@ -1,0 +1,67 @@
+"""Serializable per-slot KV sessions — slice one sequence's cache state out
+of / into a batch cache.
+
+Every model family keeps its decode state in a flat dict of arrays (see
+``cache_spec``).  A *session* is the same dict restricted to one batch slot
+(batch axis kept at size 1) with growable sequence axes trimmed to the
+sequence's live length, materialized as host numpy arrays — so it can be
+pickled, shipped to another process, or imported into a different engine's
+batch cache (live migration off a quarantined replica).
+
+Which axis is the batch axis comes from the family's
+``cache_logical_axes``; which axis (if any) grows with decode position comes
+from the family's ``cache_seq_axes`` (``None`` for fixed-size state such as
+SSM recurrent state, conv windows, or a VLM's static image-token cross-KV —
+those leaves are carried whole).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def extract_session(cache: dict, slot: int, pos: int, logical_axes: dict,
+                    seq_axes: dict) -> dict:
+    """Slice slot ``slot`` out of ``cache``: batch axis narrowed to
+    ``slot:slot+1``, sequence axes trimmed to ``[:pos]`` (the live entries),
+    leaves pulled to host numpy."""
+    out = {}
+    for name, leaf in cache.items():
+        b_axis = logical_axes[name].index("batch")
+        idx = [slice(None)] * leaf.ndim
+        idx[b_axis] = slice(slot, slot + 1)
+        s_axis = seq_axes[name]
+        if s_axis is not None:
+            idx[s_axis] = slice(0, pos)
+        out[name] = np.asarray(jax.device_get(leaf[tuple(idx)]))
+    return out
+
+
+def insert_session(cache: dict, slot: int, session: dict,
+                   logical_axes: dict) -> dict:
+    """Write a session (or a fresh single-request prefill cache — same
+    shape family) into batch slot ``slot``: every non-batch axis shorter
+    than the target is zero-padded up (a session's seq axes were trimmed at
+    extraction; a prefill cache's seq axes are prompt-length)."""
+    out = {}
+    for name, full in cache.items():
+        new = jnp.asarray(session[name])
+        b_axis = logical_axes[name].index("batch")
+        pad = [(0, 0)] * full.ndim
+        for i, (df, dn) in enumerate(zip(full.shape, new.shape)):
+            if i == b_axis:
+                continue
+            if dn > df:
+                raise ValueError(
+                    f"session leaf {name!r} axis {i} is {dn} > target {df}; "
+                    "the target engine's cache is too small for this session")
+            if df != dn:
+                pad[i] = (0, df - dn)
+        new = jnp.pad(new, pad)
+        idx = [slice(None)] * full.ndim
+        idx[b_axis] = slice(slot, slot + 1)
+        out[name] = full.at[tuple(idx)].set(new.astype(full.dtype))
+    return out

@@ -128,8 +128,11 @@ def prefill(cfg: ModelConfig, p, batch):
 def decode(cfg: ModelConfig, p, token, pos, cache):
     """One decode step against (L, B, Smax, Hkv, hd) caches.  The stacked
     caches ride the scan carry and are updated in place (token-slice DUS),
-    so per-layer traffic is the attention read + a 1-token write."""
+    so per-layer traffic is the attention read + a 1-token write.  ``pos``
+    is a scalar or a per-slot (B,) vector — ragged batches decode each slot
+    at its own position."""
     x = L.embed_tokens(cfg, p["tok"], token)
+    pos = L.position_vector(pos, x.shape[0])
 
     def body(carry, xs):
         x, kfull, vfull = carry
@@ -154,3 +157,9 @@ def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
 def cache_logical_axes(cfg: ModelConfig):
     return {"k": (None, "batch", "seq_mp", None, None),
             "v": (None, "batch", "seq_mp", None, None)}
+
+
+def cache_seq_axes(cfg: ModelConfig):
+    """Axis index (in the full cache leaf) that grows with decode position;
+    None = fixed-size state.  Used by session extract/insert."""
+    return {"k": 2, "v": 2}

@@ -167,7 +167,8 @@ def prefill(cfg: ModelConfig, p, batch):
 
 def decode(cfg: ModelConfig, p, token, pos, cache):
     x = L.embed_tokens(cfg, p["tok"], token)
-    positions = jnp.full((x.shape[0], 1), pos)
+    pos = L.position_vector(pos, x.shape[0])   # per-slot ragged positions
+    positions = pos[:, None]
     x, new_cache = _run(cfg, p, x, positions, cache=cache, pos=pos)
     x = L.apply_norm(p["ln_f"], x, cfg.norm)
     return L.lm_head(cfg, p["tok"], x), new_cache
@@ -193,3 +194,9 @@ def cache_logical_axes(cfg: ModelConfig):
         "k_cross": (None, "batch", "seq_mp", None, None),
         "v_cross": (None, "batch", "seq_mp", None, None),
     }
+
+
+def cache_seq_axes(cfg: ModelConfig):
+    # cross-KV spans the (fixed) image tokens, not the decode position —
+    # carried whole in sessions, never trimmed
+    return {"k_self": 3, "v_self": 3, "k_cross": None, "v_cross": None}

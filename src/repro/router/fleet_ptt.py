@@ -4,7 +4,9 @@ Third instantiation of the paper's data structure: cores (`core/ptt.py`) ->
 device groups (`distributed/elastic.py`) -> serving replicas.  Indexed by
 (request class, replica) with two latency rows per cell:
 
-* **TTFT** — time-to-first-token of requests routed to that replica; the
+* **TTFT** — time-to-first-token *per prompt token* of requests routed to
+  that replica (size-normalized by the router, so a 4k-prompt prefill and a
+  512-token prefill train the same row without polluting each other); the
   signal for the router's *global* search (critical traffic);
 * **TPOT** — time-per-output-token (engine decode-step latency); the
   signal for *sticky* search (non-critical, decode-heavy traffic).
@@ -65,21 +67,36 @@ class FleetPTT(EMASearchMixin):
         return (range(self.num_replicas) if healthy is None
                 else tuple(healthy))
 
-    def global_search(self, req_class: int, metric: int = TTFT,
-                      healthy: Iterable[int] | None = None,
-                      backlog: Sequence[int] | None = None) -> int:
-        """Min-predicted-latency replica over the healthy set (critical
-        traffic; the fleet analogue of the paper's global PTT search).
-        With ``backlog`` the cost is queue-inflated and ties (notably the
-        all-untrained bootstrap) break toward the shortest queue."""
+    def _cost_fn(self, req_class: int, metric: int,
+                 backlog: Sequence[int] | None):
+        """The one queue-inflated cost: latency x (1 + backlog), ties (and
+        the all-untrained bootstrap) break toward the shortest queue."""
         tab = self._tab[req_class, :, metric]
 
         def cost(r: int):
             b = backlog[r] if backlog is not None else 0
             return (tab[r] * (1 + b), b)
 
+        return cost
+
+    def global_search(self, req_class: int, metric: int = TTFT,
+                      healthy: Iterable[int] | None = None,
+                      backlog: Sequence[int] | None = None) -> int:
+        """Min-predicted-latency replica over the healthy set (critical
+        traffic; the fleet analogue of the paper's global PTT search)."""
+        cost = self._cost_fn(req_class, metric, backlog)
         return self.argmin_search((r, cost(r))
                                   for r in self._candidates(healthy))
+
+    def ranked_search(self, req_class: int, metric: int = TTFT,
+                      healthy: Iterable[int] | None = None,
+                      backlog: Sequence[int] | None = None) -> list[int]:
+        """All candidates in ascending predicted-cost order (same cost as
+        ``global_search``) — for callers that need a fallback chain, e.g.
+        session migration trying the next-best replica when the best one
+        cannot hold the session."""
+        cost = self._cost_fn(req_class, metric, backlog)
+        return sorted(self._candidates(healthy), key=cost)
 
     def sticky_search(self, req_class: int, replica: int, metric: int = TPOT,
                       healthy: Iterable[int] | None = None,
@@ -102,10 +119,12 @@ class FleetPTT(EMASearchMixin):
 
     # -- admission signal --------------------------------------------------
     def predict_ttft(self, req_class: int, replica: int,
-                     backlog: int = 0) -> float:
+                     backlog: int = 0, *, tokens: int = 1) -> float:
         """Predicted TTFT if routed to ``replica`` with ``backlog`` requests
-        already ahead of it: the learned service estimate inflated by the
+        already ahead of it.  TTFT rows are **size-normalized** (the router
+        records per-prompt-token latency), so the learned per-token estimate
+        is scaled back by the request's ``tokens`` and inflated by the
         queue.  Untrained entries predict 0.0 — optimistic, so bootstrap
         traffic is always admitted."""
         est = self._tab[req_class, replica, self.TTFT]
-        return float(est * (1 + backlog))
+        return float(est * max(tokens, 1) * (1 + backlog))

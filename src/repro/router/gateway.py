@@ -5,15 +5,25 @@ The gateway is the glue between router policy and engine mechanics:
 
 * ``submit`` classifies + routes each request (or queues/sheds it per the
   admission decision) and stamps its arrival time;
-* ``pump`` retries gateway-queued requests, steps every engine once, and
-  harvests TTFT observations: client-facing TTFT (arrival -> first token,
-  including gateway queue time) for ``ttfts()``, dispatch -> first token
-  for the FleetPTT so admission's backlog term doesn't double-count
-  queueing;
+* ``pump`` retries gateway-queued requests, **drains quarantined replicas
+  by migrating their live decode sessions** to the PTT-best healthy
+  replica (`ServeEngine.export_session` -> `import_session`), steps every
+  engine once, and harvests TTFT observations: client-facing TTFT
+  (arrival -> first token, including gateway queue time) for ``ttfts()``,
+  dispatch -> first token for the FleetPTT so admission's backlog term
+  doesn't double-count queueing;
 * each engine's ``on_step_latency`` hook feeds the router's interference
   detector, so a replica that suddenly slows down (co-tenant, thermal,
-  link degradation) is quarantined and drained without any platform
-  knowledge — the paper's core claim, at fleet scale.
+  link degradation) is quarantined — and now *actively drained*, not just
+  starved of new traffic — without any platform knowledge: the paper's
+  work-stealing of started work under dynamic asymmetry, at fleet scale;
+* when load must be dropped, the **lowest-priority** held request is shed
+  first (class priorities from the SLO policy), not the head of the
+  arrival queue.
+
+Probe requests stay pinned to their quarantined replica: they exist to
+generate the recovery signal, so migrating them off would strand the
+replica in quarantine forever.
 """
 
 from __future__ import annotations
@@ -24,7 +34,9 @@ from collections import deque
 from typing import Sequence
 
 from ..serve.engine import Request, ServeEngine
+from ..serve.scheduler import RequestClass, classify_request
 from .admission import Admission
+from .fleet_ptt import FleetPTT
 from .router import FleetRouter, RouteDecision
 
 
@@ -38,6 +50,7 @@ class _Tracked:
     t_dispatch: float        # engine submit: the PTT trains on dispatch->
                              # first-token so predict_ttft's (1+backlog)
                              # term doesn't double-count queueing
+    probe: bool = False      # pinned to its (quarantined) replica
     ttft: float | None = None
 
 
@@ -61,8 +74,10 @@ class FleetGateway:
         # (request, affinity, requeue count, arrival time)
         self.held: deque[tuple[Request, int | None, int, float]] = deque()
         self.shed: deque[Request] = deque(maxlen=self.SHED_CAP)
+        self._displaced_rids: set[int] = set()   # one displacement each
         self._ttfts: dict[int, float] = {}
         self._served = 0
+        self._migrations = 0
         self._per_replica = [0] * len(self.engines)
         for i, e in enumerate(self.engines):
             e.on_step_latency = (
@@ -74,6 +89,9 @@ class FleetGateway:
 
     def submit(self, req: Request,
                affinity: int | None = None) -> RouteDecision:
+        """Route one request.  The returned decision reflects the request's
+        actual outcome: a SHED verdict that displaced a lower-priority held
+        request (this one waits in its place) is reported as QUEUE."""
         t_arrival = self.clock()
         d = self.router.route(len(req.prompt), req.max_new,
                               affinity=affinity, backlog=self.backlog())
@@ -81,8 +99,9 @@ class FleetGateway:
             self._dispatch(req, d, t_arrival)
         elif d.action is Admission.QUEUE:
             self.held.append((req, affinity, 0, t_arrival))
-        else:
-            self.shed.append(req)
+        elif self._shed_or_displace(req, d.req_class):
+            self.held.append((req, affinity, 0, t_arrival))
+            d = dataclasses.replace(d, action=Admission.QUEUE)
         return d
 
     def _dispatch(self, req: Request, d: RouteDecision,
@@ -90,31 +109,209 @@ class FleetGateway:
         self.tracked.append(_Tracked(req=req, replica=d.replica,
                                      req_class=int(d.req_class),
                                      t_arrival=t_arrival,
-                                     t_dispatch=self.clock()))
+                                     t_dispatch=self.clock(),
+                                     probe=d.probe))
         self._per_replica[d.replica] += 1
         self.engines[d.replica].submit(req)
 
+    # -- priority-aware shedding -------------------------------------------
+    def _displace_lower_priority(self, req_class) -> bool:
+        """If a held request has strictly lower class priority, shed *it*
+        instead.  Returns True when a victim was displaced."""
+        if not self.held:
+            return False
+        pri = self.router.admission.policy.priority_of
+        cls_of = lambda r: classify_request(len(r.prompt), r.max_new)
+        i_min = min(range(len(self.held)),
+                    key=lambda i: pri(cls_of(self.held[i][0])))
+        victim, _, _, _ = self.held[i_min]
+        victim_class = cls_of(victim)
+        if pri(victim_class) >= pri(RequestClass(req_class)):
+            return False
+        del self.held[i_min]
+        self._displaced_rids.discard(victim.rid)   # victim leaves the gateway
+        self.router.admission.reclassify(victim_class, Admission.QUEUE,
+                                         Admission.SHED)
+        self.shed.append(victim)
+        return True
+
+    def _shed_or_displace(self, req: Request, req_class) -> bool:
+        """A SHED-counted outcome for ``req``: drop a lower-priority held
+        request instead when one exists (``req`` then waits in its place —
+        the caller holds it).  Each request may displace at most ONE victim
+        — a persistently hopeless request must not flush the whole
+        lower-priority queue one victim per re-evaluation.  Returns True
+        when ``req`` was kept (count moved SHED -> QUEUE), False when it
+        was shed."""
+        if (req.rid not in self._displaced_rids
+                and self._displace_lower_priority(req_class)):
+            self._displaced_rids.add(req.rid)
+            self.router.admission.reclassify(req_class, Admission.SHED,
+                                             Admission.QUEUE)
+            return True
+        self._displaced_rids.discard(req.rid)    # leaving the gateway
+        self.shed.append(req)
+        return False
+
     # -- pump --------------------------------------------------------------
     def _retry_held(self) -> None:
+        """Re-evaluate every held request exactly once.  Entries that stay
+        held go into a side list merged back afterwards, so a request that
+        just displaced a victim (or was re-queued) is NOT re-processed —
+        and not eligible as a displacement victim — within the same pass."""
         adm = self.router.admission
-        for _ in range(len(self.held)):
+        requeued: list[tuple[Request, int | None, int, float]] = []
+        while self.held:
             req, affinity, tries, t_arrival = self.held.popleft()
             d = self.router.route(len(req.prompt), req.max_new,
                                   affinity=affinity, backlog=self.backlog(),
                                   requeue=True)
-            if d.action is Admission.ADMIT:
+            if d.action is Admission.ADMIT and not d.probe:
                 adm.reclassify(d.req_class, Admission.QUEUE, Admission.ADMIT)
+                self._displaced_rids.discard(req.rid)
                 self._dispatch(req, d, t_arrival)
-            elif d.action is Admission.QUEUE and tries < self.MAX_REQUEUES:
-                self.held.append((req, affinity, tries + 1, t_arrival))
+            elif (d.action in (Admission.ADMIT, Admission.QUEUE)
+                  and tries < self.MAX_REQUEUES):
+                # ADMIT here means probe=True: a held request is never used
+                # as a probe — probes pin to their (quarantined) replica,
+                # and this request may have just been drained off it
+                requeued.append((req, affinity, tries + 1, t_arrival))
             else:
                 adm.reclassify(d.req_class, Admission.QUEUE, Admission.SHED)
-                self.shed.append(req)
+                if self._shed_or_displace(req, d.req_class):
+                    requeued.append((req, affinity, tries + 1, t_arrival))
+        self.held.extend(requeued)
+
+    # -- quarantine drain via live migration -------------------------------
+    def _tracked_index(self, rid: int) -> int | None:
+        for i, t in enumerate(self.tracked):
+            if t.req.rid == rid:
+                return i
+        return None
+
+    def _place_session(self, sess, source: int,
+                       healthy: Sequence[int]) -> int | None:
+        """Import ``sess`` into the first healthy replica — in the fleet
+        PTT's predicted-TPOT cost order (``ranked_search``, the same cost
+        routing uses) — whose cache can hold its remaining budget; back
+        onto ``source`` when nowhere fits (a near-max_seq session finishes
+        where it is).  Returns the destination or None."""
+        for dest in self.router.fleet.ranked_search(
+                int(RequestClass.DECODE), metric=FleetPTT.TPOT,
+                healthy=healthy, backlog=self.backlog()):
+            try:
+                self.engines[dest].import_session(sess)
+                return dest
+            except ValueError:
+                continue
+        self.engines[source].import_session(sess, strict=False)
+        return None
+
+    def _migrate_quarantined(self) -> int:
+        """Drain every quarantined replica: re-route its queued-but-
+        unstarted requests, move its pending session imports, and migrate
+        its live decode sessions to the best healthy replica.  Probe
+        traffic stays (it carries the recovery signal).  Returns sessions
+        migrated this pump."""
+        quarantined = sorted(self.router.detector.quarantined)
+        if not quarantined:
+            return 0
+        healthy = self.router.healthy()
+        if not healthy:
+            return 0                 # nowhere to go: degrade gracefully
+        moved = 0
+        for r in quarantined:
+            e = self.engines[r]
+            for req in e.drain_queue():
+                i = self._tracked_index(req.rid)
+                t = self.tracked[i] if i is not None else None
+                if t is not None and t.probe:
+                    e.submit(req)    # probes stay: recovery signal
+                    continue
+                # a relocated prompt must fit the destination's cache
+                # (heterogeneous max_seq fleets) — a non-fitting dispatch
+                # would blow up that engine's next admission
+                fits = [h for h in healthy
+                        if len(req.prompt) < self.engines[h].max_seq]
+                if t is None:
+                    # not gateway-managed (submitted straight to the
+                    # engine): relocate it without touching admission
+                    # counters it was never part of
+                    if not fits:
+                        e.submit(req)            # stays where it fits
+                        continue
+                    c = classify_request(len(req.prompt), req.max_new)
+                    dest = self.router.fleet.global_search(
+                        int(c), metric=FleetPTT.TTFT, healthy=fits,
+                        backlog=self.backlog())
+                    self.engines[dest].submit(req)
+                    continue
+                self.tracked.pop(i)
+                self._per_replica[r] -= 1        # never actually served here
+                t_arrival = t.t_arrival
+                d = self.router.route(len(req.prompt), req.max_new,
+                                      backlog=self.backlog(), requeue=True)
+                # probe decisions are refused here: the probe branch would
+                # happily send the evacuated request back to an idle
+                # quarantined replica — possibly the one being drained —
+                # and pin it there
+                if (d.action is Admission.ADMIT and d.replica is not None
+                        and not d.probe and d.replica in fits):
+                    self._dispatch(req, d, t_arrival)
+                elif d.action is Admission.SHED:
+                    self.router.admission.reclassify(
+                        d.req_class, Admission.ADMIT, Admission.SHED)
+                    if self._shed_or_displace(req, d.req_class):
+                        self.held.append((req, None, 0, t_arrival))
+                else:
+                    self.router.admission.reclassify(
+                        d.req_class, Admission.ADMIT, Admission.QUEUE)
+                    self.held.append((req, None, 0, t_arrival))
+            # sessions parked in the import queue must not decode here even
+            # once — move them before they get slotted
+            for sess in e.drain_sessions():
+                i = self._tracked_index(sess.req.rid)
+                t = self.tracked[i] if i is not None else None
+                if t is not None and t.probe:
+                    e.import_session(sess)
+                    continue
+                dest = self._place_session(sess, r, healthy)
+                if dest is not None:
+                    if t is not None:            # gateway-managed: move the
+                        t.replica = dest         # dispatch credit along
+                        self._per_replica[r] -= 1
+                        self._per_replica[dest] += 1
+                    moved += 1
+            for t in list(self.tracked):
+                if t.replica != r or t.probe or t.req.done:
+                    continue
+                pos = e.active_pos(t.req.rid)
+                if pos is None:
+                    continue         # finished or still queued elsewhere
+                # skip the device->host KV round-trip entirely when no
+                # healthy replica can hold the remaining budget (the
+                # session would only bounce back here every pump)
+                remaining = max(t.req.max_new - len(t.req.out_tokens), 0)
+                if not any(self.engines[h].can_hold(pos, remaining)
+                           for h in healthy):
+                    continue
+                sess = e.export_session(t.req.rid)
+                dest = self._place_session(sess, r, healthy)
+                if dest is None:
+                    continue         # nowhere fits: stays on the source
+                t.replica = dest
+                self._per_replica[r] -= 1        # credit follows the work
+                self._per_replica[dest] += 1
+                moved += 1
+        self._migrations += moved
+        return moved
 
     def pump(self) -> int:
-        """One gateway iteration: retry queued, step every engine, harvest
-        TTFTs.  Returns the number of sequences still active fleet-wide."""
+        """One gateway iteration: retry queued, drain quarantined replicas,
+        step every engine, harvest TTFTs.  Returns the number of sequences
+        still active fleet-wide."""
         self._retry_held()
+        self._migrate_quarantined()
         active = 0
         for e in self.engines:
             active += e.step()
@@ -122,8 +319,8 @@ class FleetGateway:
         for t in self.tracked:
             if t.ttft is None and t.req.out_tokens:
                 # the engine stamps first-token time at prefill, so the
-                # sample is exact — not inflated by the rest of the wave,
-                # the batch decode, or other engines' steps this pump
+                # sample is exact — not inflated by other admissions, the
+                # batch decode, or other engines' steps this pump
                 tok = (t.req.t_first if t.req.t_first is not None
                        else self.clock())
                 t.ttft = tok - t.t_arrival
@@ -131,7 +328,8 @@ class FleetGateway:
                     self._ttfts.pop(next(iter(self._ttfts)))
                 self._ttfts[t.req.rid] = t.ttft
                 self.router.record_ttft(t.replica, t.req_class,
-                                        tok - t.t_dispatch)
+                                        tok - t.t_dispatch,
+                                        prompt_len=len(t.req.prompt))
             if t.req.done and t.ttft is not None:
                 self._served += 1       # finished: stop tracking it
             else:
@@ -152,6 +350,7 @@ class FleetGateway:
     def stats(self) -> dict:
         s = self.router.stats()
         s["served"] = self._served
+        s["migrations"] = self._migrations
         s["shed_requests"] = [r.rid for r in self.shed]
         s["per_replica"] = list(self._per_replica)
         s["utilization"] = [round(e.utilization(), 3) for e in self.engines]

@@ -61,8 +61,12 @@ class InterferenceDetector(EMASearchMixin):
             self.fast[replica], latency, old_weight=1.0, den=2.0)
         self.samples[replica] += 1
         if replica in self.quarantined:
-            # baseline frozen; watch the fast EMA for recovery
-            if self.fast[replica] <= cfg.readmit_ratio * self.baseline[replica]:
+            # baseline frozen; watch the fast EMA for recovery.  An
+            # untrained baseline (possible only via force_quarantine before
+            # any samples) re-admits on the first sample — no evidence of
+            # slowness must not strand capacity forever
+            b = self.baseline[replica]
+            if b == 0.0 or self.fast[replica] <= cfg.readmit_ratio * b:
                 self.quarantined.discard(replica)
                 self.events.append(("readmit", replica))
                 return "readmit"
@@ -87,6 +91,17 @@ class InterferenceDetector(EMASearchMixin):
         else:
             self._drift_run[replica] = 0
         return None
+
+    def force_quarantine(self, replica: int) -> None:
+        """Administratively quarantine a replica (ops intervention, tests,
+        benchmark fault injection) through the same state transition the
+        detector's own trigger performs — callers must not poke
+        ``quarantined``/``events`` directly or they drift from any
+        bookkeeping this path gains."""
+        if replica not in self.quarantined:
+            self._drift_run[replica] = 0
+            self.quarantined.add(replica)
+            self.events.append(("quarantine", replica))
 
     # -- views -------------------------------------------------------------
     def is_healthy(self, replica: int) -> bool:

@@ -32,6 +32,7 @@ class RouteDecision:
     req_class: RequestClass
     action: Admission
     predicted_ttft: float
+    predicted_tpot: float = 0.0
     probe: bool = False              # sacrificial probe of a quarantined
                                      # replica (bypasses admission)
 
@@ -103,22 +104,36 @@ class FleetRouter:
             r = self.fleet.global_search(c, metric=FleetPTT.TTFT,
                                          healthy=healthy or None,
                                          backlog=backlog)
-        pred = self.fleet.predict_ttft(c, r,
-                                       backlog[r] if backlog else 0)
-        action = (self.admission.evaluate(c, pred) if requeue
-                  else self.admission.decide(c, pred))
+        pred = self.fleet.predict_ttft(c, r, backlog[r] if backlog else 0,
+                                       tokens=prompt_len)
+        # TPOT budget: the replica's decode-step latency row (0.0 when
+        # untrained — optimistic, like the TTFT bootstrap)
+        pred_tpot = self.fleet.value(int(RequestClass.DECODE), r,
+                                     FleetPTT.TPOT)
+        action = (self.admission.evaluate(c, pred, pred_tpot) if requeue
+                  else self.admission.decide(c, pred, pred_tpot))
         return RouteDecision(
             replica=r if action is Admission.ADMIT else None,
-            req_class=c, action=action, predicted_ttft=pred)
+            req_class=c, action=action, predicted_ttft=pred,
+            predicted_tpot=pred_tpot)
 
     # -- feedback ----------------------------------------------------------
     def record_ttft(self, replica: int, req_class: RequestClass,
-                    ttft: float) -> None:
+                    ttft: float, *, prompt_len: int) -> None:
         """Observed time-to-first-token of a request served on ``replica``,
         measured from dispatch (client-facing arrival-based TTFT is the
         gateway's metric; the table needs the dispatch-based figure so
-        ``predict_ttft``'s backlog term doesn't double-count queueing)."""
-        self.fleet.update(int(req_class), replica, FleetPTT.TTFT, ttft)
+        ``predict_ttft``'s backlog term doesn't double-count queueing).
+
+        The sample is stored **per prompt token** (size-normalized): one
+        class row mixes prompt sizes — a run of 4k prefills would otherwise
+        make the row predict 4k-latencies for 512-token requests (and the
+        global search would chase prompt-size noise instead of replica
+        speed).  ``prompt_len`` is keyword-required so a caller recording
+        an absolute TTFT with the old arity fails loudly instead of
+        silently poisoning the per-token row."""
+        self.fleet.update(int(req_class), replica, FleetPTT.TTFT,
+                          ttft / max(prompt_len, 1))
 
     def record_step(self, replica: int, latency: float) -> None:
         """Engine decode-step latency: trains the TPOT row and is the

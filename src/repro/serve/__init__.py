@@ -1,4 +1,5 @@
-from .engine import Request, ServeEngine
+from .engine import Request, ServeEngine, Session
 from .scheduler import ElasticServeScheduler, RequestClass
 
-__all__ = ["Request", "ServeEngine", "ElasticServeScheduler", "RequestClass"]
+__all__ = ["Request", "ServeEngine", "Session", "ElasticServeScheduler",
+           "RequestClass"]

@@ -1,13 +1,21 @@
-"""Continuous-batching serving engine.
+"""Ragged continuous-batching serving engine with serializable KV sessions.
 
 Real execution path (works on one CPU device with a reduced model; on a pod
 each width-w place holds a compiled executable pair):
 
-* requests arrive with prompt tokens; admission pads/batches prompts and
-  runs ``model.prefill``; KV caches are padded to the engine's max length
-  and merged into the active decode batch;
-* every engine step decodes one token for the whole active batch;
-* finished sequences (max_new reached) free their slots;
+* requests arrive with prompt tokens; **any free slot admits any queued
+  prompt** regardless of length or current batch occupancy — prefill runs
+  per request and its KV cache is inserted into the slot's rows of the
+  batch cache (``Model.insert_session``);
+* every engine step decodes one token for the whole active batch at
+  **per-slot positions** (each slot masks/writes at its own position, so a
+  slot admitted mid-flight decodes next to slots deep into generation);
+* finished sequences (max_new reached) free their slots immediately;
+* a live request can leave the engine as a :class:`Session`
+  (``export_session``) — tokens, position, and its KV/state slice pulled to
+  host numpy — and resume on another engine (``import_session``), which is
+  how the fleet gateway drains a quarantined replica without killing its
+  in-flight work;
 * the :class:`ElasticServeScheduler` is consulted per prefill (critical) and
   per decode batch (non-critical) so the PTT learns group/width latencies —
   on one device the decision is degenerate but the full control path runs.
@@ -33,11 +41,26 @@ class Request:
     rid: int
     prompt: np.ndarray           # (prompt_len,)
     max_new: int
+    extras: dict = dataclasses.field(default_factory=dict)
+                                 # extra prefill inputs without the batch
+                                 # axis (e.g. vlm "image_embeds")
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     t_first: float | None = None   # wall time the first token was produced
                                    # (stamped at prefill, so fleet TTFT is
-                                   # not inflated by the rest of the wave)
+                                   # not inflated by other admissions)
+
+
+@dataclasses.dataclass
+class Session:
+    """A live request frozen for transport: the Request object itself (so
+    the client's handle keeps accumulating tokens after migration), its
+    decode position, the next input token, and its cache slice as host
+    numpy arrays (``Model.extract_session``)."""
+    req: Request
+    pos: int
+    cur_token: int
+    cache: dict
 
 
 class ServeEngine:
@@ -49,16 +72,20 @@ class ServeEngine:
         self.max_seq = max_seq
         self.scheduler = ElasticServeScheduler(num_groups)
         self.queue: deque[Request] = deque()
+        self.sessions_in: deque[Session] = deque()   # imported, not yet slotted
         self.active: list[Request | None] = [None] * max_batch
         self.cache = None
         self.pos = np.zeros(max_batch, dtype=np.int32)
         self.cur_token = np.zeros((max_batch, 1), dtype=np.int32)
-        self._decode = jax.jit(
-            lambda p, t, pos, c: model.decode(p, t, pos, c))
+        # the Model owns one jitted decode: replicas sharing a Model share
+        # the compiled executable, and it dies with the Model
+        self._decode = model.decode_jit
         # fleet surface (router/gateway): called with each step's *decode*
         # latency (admission/prefill excluded — the interference detector
-        # needs a homogeneous per-replica signal, and a wave admission
-        # would read as a latency spike on a healthy replica)
+        # needs a homogeneous per-replica signal, and an admission-heavy
+        # step would read as a latency spike on a healthy replica).  Steps
+        # that run no decode (idle, or every admission finished at prefill)
+        # leave the hook uncalled and last_step_latency untouched.
         self.on_step_latency = None
         self.last_step_latency = 0.0
 
@@ -68,8 +95,8 @@ class ServeEngine:
 
     # -- non-blocking fleet surface ----------------------------------------
     def pending(self) -> int:
-        """Requests queued but not yet admitted into the batch."""
-        return len(self.queue)
+        """Requests queued (fresh or imported sessions) but not slotted."""
+        return len(self.queue) + len(self.sessions_in)
 
     def active_count(self) -> int:
         return sum(r is not None for r in self.active)
@@ -81,68 +108,126 @@ class ServeEngine:
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.active) if r is None]
 
+    def _ensure_cache(self) -> None:
+        if self.cache is None:
+            spec = self.model.cache_spec(self.max_batch, self.max_seq)
+            self.cache = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
     def _admit(self) -> None:
-        # wave admission: the decode path takes a scalar position, so a wave
-        # admits equal-prompt-length requests into an empty batch (ragged
-        # positions need per-slot pos / paged KV — see DESIGN.md future work)
-        if self.active_count() or not self.queue:
-            return
-        wave_len = len(self.queue[0].prompt)
+        # ragged continuous batching: any free slot takes any queued prompt
+        # (imported sessions first — their prefill was already paid on the
+        # engine they came from)
         slots = self._free_slots()
-        while slots and self.queue and len(self.queue[0].prompt) == wave_len:
+        while slots and self.sessions_in:
+            self._install_session(slots.pop(0), self.sessions_in.popleft())
+        while slots and self.queue:
             req = self.queue.popleft()
-            slot = slots.pop(0)
             t0 = time.perf_counter()
             d = self.scheduler.schedule_prefill(len(req.prompt))
-            logits, cache = self.model.prefill(
-                self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
+            batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
+            for name, val in req.extras.items():
+                batch[name] = jnp.asarray(val)[None]
+            logits, cache = self.model.prefill(self.params, batch)
             next_tok = int(jnp.argmax(logits[0, -1]))
             self.scheduler.record(d, time.perf_counter() - t0,
                                   time.perf_counter())
             req.out_tokens.append(next_tok)
             req.t_first = time.perf_counter()
-            self._merge_cache(slot, cache, len(req.prompt))
+            if len(req.out_tokens) >= req.max_new:
+                req.done = True          # finished at prefill: no slot used
+                continue
+            slot = slots.pop(0)
+            self._ensure_cache()
+            self.cache = self.model.insert_session(self.cache, slot, cache)
             self.active[slot] = req
             self.pos[slot] = len(req.prompt)
             self.cur_token[slot, 0] = next_tok
 
-    def _merge_cache(self, slot: int, cache, prompt_len: int) -> None:
-        if self.cache is None:
-            spec = self.model.cache_spec(self.max_batch, self.max_seq)
-            self.cache = jax.tree.map(
-                lambda s: jnp.zeros(s.shape, s.dtype), spec)
-        axes = self.model.cache_logical_axes()
+    # -- session migration -------------------------------------------------
+    def export_session(self, rid: int) -> Session:
+        """Freeze an active request into a transportable Session and free
+        its slot.  Raises KeyError if ``rid`` is not active (still queued
+        requests are moved by re-routing the Request itself)."""
+        for slot, req in enumerate(self.active):
+            if req is not None and req.rid == rid:
+                pos = int(self.pos[slot])
+                sess = Session(
+                    req=req, pos=pos, cur_token=int(self.cur_token[slot, 0]),
+                    cache=self.model.extract_session(self.cache, slot, pos))
+                self.active[slot] = None
+                self.pos[slot] = 0
+                return sess
+        raise KeyError(f"rid {rid} is not active on this engine")
 
-        def merge(full, new, ax):
-            b_axis = ax.index("batch")       # model-declared batch axis
-            idx = [slice(None)] * full.ndim
-            idx[b_axis] = slice(slot, slot + 1)
-            pad = [(0, 0)] * full.ndim
-            for i, (df, dn) in enumerate(zip(full.shape, new.shape)):
-                if i != b_axis and df != dn:
-                    pad[i] = (0, df - dn)
-            new = jnp.pad(new, pad)
-            return full.at[tuple(idx)].set(new.astype(full.dtype))
+    def can_hold(self, pos: int, remaining: int) -> bool:
+        """Whether a session at ``pos`` with ``remaining`` tokens to decode
+        fits this engine without truncation — the one fit rule shared by
+        ``import_session`` and migration feasibility pre-checks."""
+        return pos + remaining <= self.max_seq - 1
 
-        self.cache = jax.tree.map(
-            merge, self.cache, cache, axes,
-            is_leaf=lambda t: isinstance(t, jax.Array))
+    def import_session(self, sess: Session, strict: bool = True) -> None:
+        """Accept a migrated session; it resumes decoding at the next
+        ``step`` with a free slot (ahead of fresh prompts).
+
+        ``strict`` (default) also requires the engine to hold the session's
+        *remaining token budget* — a smaller-max_seq replica would otherwise
+        silently truncate the generation, breaking token identity across
+        the migration.  ``strict=False`` is for re-parking a session on its
+        source engine, where truncation semantics are unchanged."""
+        if sess.pos >= self.max_seq - 1:
+            raise ValueError(
+                f"session at pos {sess.pos} does not fit max_seq "
+                f"{self.max_seq}")
+        remaining = max(sess.req.max_new - len(sess.req.out_tokens), 0)
+        if strict and not self.can_hold(sess.pos, remaining):
+            raise ValueError(
+                f"session at pos {sess.pos} with {remaining} tokens to go "
+                f"would truncate at max_seq {self.max_seq}")
+        self.sessions_in.append(sess)
+
+    def active_pos(self, rid: int) -> int | None:
+        """Decode position of an active request (None if not active) —
+        lets a migration planner check placement feasibility without
+        paying for an export."""
+        for slot, req in enumerate(self.active):
+            if req is not None and req.rid == rid:
+                return int(self.pos[slot])
+        return None
+
+    def drain_queue(self) -> list[Request]:
+        """Remove and return all queued-but-unstarted requests (gateway
+        re-routes them when this replica is quarantined)."""
+        out = list(self.queue)
+        self.queue.clear()
+        return out
+
+    def drain_sessions(self) -> list[Session]:
+        """Remove and return imported-but-not-yet-slotted sessions — a
+        quarantined replica must not decode them even once."""
+        out = list(self.sessions_in)
+        self.sessions_in.clear()
+        return out
+
+    def _install_session(self, slot: int, sess: Session) -> None:
+        self._ensure_cache()
+        self.cache = self.model.insert_session(self.cache, slot, sess.cache)
+        self.active[slot] = sess.req
+        self.pos[slot] = sess.pos
+        self.cur_token[slot, 0] = sess.cur_token
 
     # -- decode loop ---------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration: admit + decode one token for the batch.
-        Returns number of active sequences."""
+        """One engine iteration: admit + decode one token for the batch at
+        per-slot positions.  Returns number of active sequences."""
         self._admit()
         n_active = self.active_count()
         if n_active == 0:
             return 0
-        t0 = time.perf_counter()
         d = self.scheduler.schedule_decode(group=0)
-        # batched single-position decode: use the max position (padded slots
-        # attend to zeros, harmless; per-slot masking via position arg)
-        pos = int(self.pos.max())
+        t0 = time.perf_counter()
         logits, self.cache = self._decode(
-            self.params, jnp.asarray(self.cur_token), jnp.asarray(pos),
+            self.params, jnp.asarray(self.cur_token), jnp.asarray(self.pos),
             self.cache)
         decode_elapsed = time.perf_counter() - t0
         self.scheduler.record(d, decode_elapsed, time.perf_counter())
@@ -153,9 +238,11 @@ class ServeEngine:
             req.out_tokens.append(int(toks[i]))
             self.pos[i] += 1
             self.cur_token[i, 0] = int(toks[i])
-            if len(req.out_tokens) >= req.max_new or self.pos[i] >= self.max_seq - 1:
+            if (len(req.out_tokens) >= req.max_new
+                    or self.pos[i] >= self.max_seq - 1):
                 req.done = True
                 self.active[i] = None
+                self.pos[i] = 0
         self.last_step_latency = decode_elapsed
         if self.on_step_latency is not None:
             self.on_step_latency(decode_elapsed)
@@ -163,5 +250,5 @@ class ServeEngine:
 
     def run_until_drained(self, max_steps: int = 10000) -> None:
         for _ in range(max_steps):
-            if self.step() == 0 and not self.queue:
+            if self.step() == 0 and not self.pending():
                 return

@@ -65,6 +65,19 @@ def test_fleet_ptt_sticky_search_avoids_migration():
     assert f.sticky_search(c, replica=0, healthy=[1, 2]) in (1, 2)
 
 
+def test_fleet_ptt_ranked_search_orders_by_global_cost():
+    f = FleetPTT(num_replicas=4, num_classes=1)
+    for r, t in enumerate((0.4, 0.1, 0.3, 0.2)):
+        f.update(0, r, FleetPTT.TTFT, t)
+    ranked = f.ranked_search(0)
+    assert ranked == [1, 3, 2, 0]
+    assert ranked[0] == f.global_search(0)       # same cost model
+    # backlog inflates the cost identically in both searches
+    backlog = [0, 9, 0, 0]
+    ranked = f.ranked_search(0, backlog=backlog)
+    assert ranked[0] == f.global_search(0, backlog=backlog) == 3
+
+
 def test_fleet_ptt_predict_ttft_scales_with_backlog():
     f = FleetPTT(num_replicas=2, num_classes=1)
     f.update(0, 0, FleetPTT.TTFT, 0.5)
@@ -161,6 +174,28 @@ def test_detector_ignores_single_spike():
     assert det.observe(0, 50.0) == "quarantine"
 
 
+def test_force_quarantine_with_untrained_baseline_recovers():
+    """Administrative quarantine before any samples must not strand the
+    replica forever: with no baseline evidence, the first sample
+    re-admits."""
+    det = InterferenceDetector(num_replicas=2)
+    det.force_quarantine(0)
+    assert not det.is_healthy(0)
+    assert ("quarantine", 0) in det.events
+    assert det.observe(0, 0.01) == "readmit"
+    assert det.is_healthy(0)
+    # with a trained baseline, forced quarantine behaves like an organic
+    # one: slow samples keep it out, recovery re-admits
+    for _ in range(8):
+        det.observe(1, 1.0)
+    det.force_quarantine(1)
+    assert det.observe(1, 5.0) is None        # still slow: stays out
+    for _ in range(10):
+        if det.observe(1, 1.0) == "readmit":
+            break
+    assert det.is_healthy(1)
+
+
 # ---------------------------------------------------------------------------
 # AdmissionController
 # ---------------------------------------------------------------------------
@@ -187,9 +222,11 @@ def test_router_sheds_and_queues_via_predictions():
         ttft={RequestClass.PREFILL_SHORT: 0.1,
               RequestClass.PREFILL_LONG: 1.0,
               RequestClass.DECODE: 1.0}))
-    # train both replicas hot: 0.09s TTFT for short prefills
+    # train both replicas hot: 0.09s TTFT for 512-token short prefills
+    # (rows are size-normalized, so the prompt length rides along)
     for r in range(2):
-        router.record_ttft(r, RequestClass.PREFILL_SHORT, 0.09)
+        router.record_ttft(r, RequestClass.PREFILL_SHORT, 0.09,
+                           prompt_len=512)
     d = router.route(prompt_len=512, max_new=8, backlog=[0, 0])
     assert d.action is Admission.ADMIT and d.replica is not None
     d = router.route(prompt_len=512, max_new=8, backlog=[2, 2])
@@ -207,7 +244,8 @@ def test_router_critical_avoids_quarantined_replica():
     router = FleetRouter(num_replicas=3, slo=SLOPolicy.unlimited(),
                          probe_every=2)
     for r in range(3):
-        router.record_ttft(r, RequestClass.PREFILL_SHORT, 0.1)
+        router.record_ttft(r, RequestClass.PREFILL_SHORT, 0.1,
+                           prompt_len=512)
         for _ in range(6):
             router.record_step(r, 0.01)
     # replica 0 degrades 5x -> detector quarantines it off the step signal
@@ -246,6 +284,83 @@ def test_router_probes_quarantined_with_noncritical():
     assert router.detector.is_healthy(0)
 
 
+def test_ttft_rows_are_size_normalized():
+    """Prefill TTFT rows store per-prompt-token latency: a short and a long
+    prefill at the same per-token speed train the row to the same value,
+    and predictions scale back by the request's size."""
+    router = FleetRouter(num_replicas=1, slo=SLOPolicy.unlimited())
+    c = RequestClass.PREFILL_SHORT
+    router.record_ttft(0, c, 0.5, prompt_len=500)     # 1 ms/token
+    assert router.fleet.value(int(c), 0, FleetPTT.TTFT) == pytest.approx(
+        0.001)
+    router.record_ttft(0, c, 2.0, prompt_len=2000)    # same speed, 4x size
+    assert router.fleet.value(int(c), 0, FleetPTT.TTFT) == pytest.approx(
+        0.001)                                        # row not polluted
+    assert router.fleet.predict_ttft(int(c), 0, backlog=0,
+                                     tokens=1000) == pytest.approx(1.0)
+    assert router.fleet.predict_ttft(int(c), 0, backlog=1,
+                                     tokens=1000) == pytest.approx(2.0)
+
+
+def test_admission_tpot_slo_enforced():
+    """A replica whose decode-step latency blows the class TPOT budget is
+    queued/shed even when its TTFT prediction is fine."""
+    slo = SLOPolicy(ttft={c: 10.0 for c in RequestClass}, patience=2.0,
+                    tpot={c: 0.1 for c in RequestClass})
+    adm = AdmissionController(slo)
+    c = RequestClass.DECODE
+    assert adm.evaluate(c, 0.5, predicted_tpot=0.05) is Admission.ADMIT
+    assert adm.evaluate(c, 0.5, predicted_tpot=0.15) is Admission.QUEUE
+    assert adm.evaluate(c, 0.5, predicted_tpot=0.5) is Admission.SHED
+    # the worse of the two budgets wins
+    assert adm.evaluate(c, 100.0, predicted_tpot=0.05) is Admission.SHED
+
+    router = FleetRouter(num_replicas=1, slo=slo)
+    for _ in range(4):                    # train the TPOT row hot: 0.5s/step
+        router.record_step(0, 0.5)
+    d = router.route(prompt_len=16, max_new=64, backlog=[0])
+    assert d.action is Admission.SHED
+    assert d.predicted_tpot == pytest.approx(0.5)
+
+
+def test_gateway_priority_shedding_drops_lowest_class_first():
+    """When a SHED is forced while lower-priority work is held, the
+    lowest-priority held request is dropped and the new request waits in
+    its place (first step toward weighted fair shedding)."""
+    cfg = get_config("smollm-135m", reduced=True)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    slo = SLOPolicy(ttft={RequestClass.PREFILL_SHORT: 0.1,
+                          RequestClass.PREFILL_LONG: 0.1,
+                          RequestClass.DECODE: 1.0}, patience=3.0)
+    gw = FleetGateway([ServeEngine(m, params, max_batch=2, max_seq=24)],
+                      router=FleetRouter(1, slo=slo))
+    # decode-heavy (priority 0) request held at the gateway
+    low = Request(rid=0, prompt=rng.integers(0, cfg.vocab, 16), max_new=64)
+    # per-token est 0.125 -> predicted 2.0 for a 16-token prompt: between
+    # the 1.0 SLO and 3.0 patience -> QUEUE
+    gw.router.record_ttft(0, RequestClass.DECODE, 2.0, prompt_len=16)
+    d = gw.submit(low)
+    assert d.action is Admission.QUEUE and list(gw.held)[0][0] is low
+    # short-prefill (priority 2) arrives with a hopeless prediction: the
+    # held decode request is displaced, the prefill waits instead
+    gw.router.record_ttft(0, RequestClass.PREFILL_SHORT, 1.0 * 512,
+                          prompt_len=512)
+    high = Request(rid=1, prompt=rng.integers(0, cfg.vocab, 512), max_new=8)
+    d = gw.submit(high)
+    # the SHED verdict displaced the held decode request; the returned
+    # decision reports the submitted request's actual outcome (QUEUE)
+    assert d.action is Admission.QUEUE
+    assert low in gw.shed                      # the victim is `low`
+    assert any(h[0] is high for h in gw.held)
+    n = gw.router.admission.counts()
+    assert n["shed"][RequestClass.DECODE] == 1
+    assert n["queued"][RequestClass.PREFILL_SHORT] == 1
+    assert n["shed"][RequestClass.PREFILL_SHORT] == 0
+    assert all(v >= 0 for b in n.values() for v in b.values())
+
+
 def test_classify_request_fleet_split():
     assert classify_request(512, 8) == RequestClass.PREFILL_SHORT
     assert classify_request(4096, 8) == RequestClass.PREFILL_LONG
@@ -279,6 +394,109 @@ def test_gateway_end_to_end_two_replicas():
     assert len(gw.ttfts()) == len(reqs)
     assert gw.router.fleet.updates > len(reqs)
     assert gw.router.detector.samples.sum() > 0
+
+
+def test_gateway_migrates_live_sessions_off_quarantined_replica():
+    """Mid-stream quarantine: every in-flight decode session leaves the
+    quarantined replica (export_session -> import_session on the PTT-best
+    healthy replica), the replica is empty afterwards, and all migrated
+    requests produce exactly the tokens an unmigrated greedy decode would
+    have produced."""
+    cfg = get_config("smollm-135m", reduced=True)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(5))
+    engines = [ServeEngine(m, params, max_batch=2, max_seq=48)
+               for _ in range(2)]
+    gw = FleetGateway(engines)
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 6), max_new=10)
+            for i in range(4)]
+    for r in reqs:
+        gw.submit(r)
+    for _ in range(3):               # sessions get a few tokens in flight
+        gw.pump()
+    victim = max(range(2), key=lambda i: engines[i].active_count())
+    n_live = engines[victim].active_count()
+    assert n_live > 0
+    gw.router.detector.force_quarantine(victim)
+    gw.pump()                        # drain pump: migration happens here
+    assert engines[victim].active_count() == 0
+    assert gw.stats()["migrations"] == n_live
+    gw.run_until_drained(max_steps=300)
+    assert all(r.done for r in reqs)
+    assert len(gw.ttfts()) == len(reqs)
+    # greedy-decode determinism across the migration
+    import jax.numpy as jnp
+    for r in reqs:
+        toks = list(r.prompt)
+        for _ in range(10):
+            logits = m.forward(params, {"tokens": jnp.asarray(toks)[None]})
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        assert r.out_tokens[:10] == toks[len(r.prompt):], (r.rid,)
+
+
+def test_priority_displacement_does_not_cascade():
+    """A persistently hopeless high-priority request may displace at most
+    ONE lower-priority victim; re-evaluations must not flush the whole
+    held queue before it finally sheds itself."""
+    cfg = get_config("smollm-135m", reduced=True)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(7))
+    rng = np.random.default_rng(7)
+    slo = SLOPolicy(ttft={RequestClass.PREFILL_SHORT: 0.1,
+                          RequestClass.PREFILL_LONG: 0.1,
+                          RequestClass.DECODE: 1.0}, patience=3.0)
+    gw = FleetGateway([ServeEngine(m, params, max_batch=2, max_seq=24)],
+                      router=FleetRouter(1, slo=slo))
+    gw.router.record_ttft(0, RequestClass.DECODE, 2.0, prompt_len=16)
+    lows = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 16),
+                    max_new=64) for i in range(2)]
+    for r in lows:
+        assert gw.submit(r).action is Admission.QUEUE     # both viable
+    gw.router.record_ttft(0, RequestClass.PREFILL_SHORT, 512.0,
+                          prompt_len=512)
+    hopeless = Request(rid=9, prompt=rng.integers(0, cfg.vocab, 512),
+                       max_new=8)
+    gw.submit(hopeless)                    # displaces exactly one victim
+    for _ in range(3):                     # re-evaluations must not cascade
+        gw._retry_held()
+    assert hopeless in gw.shed             # finally shed itself
+    assert sum(r in gw.shed for r in lows) == 1
+    assert sum(h[0] in lows for h in gw.held) == 1   # one survivor held
+
+
+def test_gateway_drains_pending_session_imports_too():
+    """A session parked in a quarantined replica's import queue (it arrived
+    while the batch was full) must be moved on before it ever decodes
+    there."""
+    cfg = get_config("smollm-135m", reduced=True)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(6))
+    engines = [ServeEngine(m, params, max_batch=1, max_seq=48)
+               for _ in range(2)]
+    gw = FleetGateway(engines)
+    rng = np.random.default_rng(6)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 6), max_new=12)
+            for i in range(2)]
+    for r in reqs:
+        gw.submit(r)
+    for _ in range(2):
+        gw.pump()
+    # hand-carry replica 0's live session into replica 1's full batch: it
+    # waits in sessions_in
+    src = gw.tracked[0].replica
+    dst = 1 - src
+    sess = engines[src].export_session(gw.tracked[0].req.rid)
+    engines[dst].import_session(sess)
+    gw.tracked[0].replica = dst
+    assert len(engines[dst].sessions_in) == 1
+    gw.router.detector.force_quarantine(dst)
+    gw.pump()
+    assert not engines[dst].sessions_in       # moved, not merely unslotted
+    assert gw.tracked and all(t.replica != dst or t.req.done
+                              for t in gw.tracked)
+    gw.run_until_drained(max_steps=300)
+    assert all(r.done for r in reqs)
 
 
 def test_gateway_sheds_when_slo_unreachable():
