@@ -7,6 +7,10 @@ from .ptt import (EMASearchMixin, PTT, PTTConfig, make_ptt_array,
                   ptt_global_search, ptt_local_search, ptt_update)
 from .scheduler import (HomogeneousScheduler, PerformanceBasedScheduler,
                         SchedulingPolicy)
+from .tracetable import (Candidate, CostModel, GlobalSearch, Latency,
+                         MigrationCost, Occupancy, QueueAware, RankedSearch,
+                         SearchContext, SearchPolicy, StickySearch, Sum,
+                         TraceTable)
 
 __all__ = [
     "KernelType", "RandomDAGConfig", "TaskDAG", "TaskNode", "chain_dag",
@@ -15,4 +19,7 @@ __all__ = [
     "EMASearchMixin", "PTT", "PTTConfig", "make_ptt_array", "ptt_global_search",
     "ptt_local_search", "ptt_update",
     "HomogeneousScheduler", "PerformanceBasedScheduler", "SchedulingPolicy",
+    "Candidate", "CostModel", "GlobalSearch", "Latency", "MigrationCost",
+    "Occupancy", "QueueAware", "RankedSearch", "SearchContext",
+    "SearchPolicy", "StickySearch", "Sum", "TraceTable",
 ]

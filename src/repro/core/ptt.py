@@ -1,80 +1,49 @@
-"""Performance Trace Table (PTT) — the paper's primary data structure.
+"""Performance Trace Table (PTT) — the paper's primary data structure at
+its original scale: CPU cores.
 
-The PTT is an online latency model indexed by (leader core, resource width)
-per task *type*.  Entries start at 0.0 ("zero predicted time"), which makes
-untrained configurations globally optimal until visited, guaranteeing that
-every valid (core, width) pair is eventually trained (paper §3.2).  Updates
-use an exponential moving average at weight 1:4:
+``PTT`` is a thin instantiation of :class:`repro.core.tracetable.TraceTable`
+(the one EMA/search implementation shared by every scale) with key axes
+(task type, leader core, width index), aware of the cluster layout: valid
+(leader, width) pairs never straddle an LLC cluster, and the entry count
+per cluster of N cores is 2N-1 for power-of-two N (paper §3.3 overhead
+argument).  Entries start at 0.0 ("zero predicted time"), which makes
+untrained configurations globally optimal until visited (§3.2); updates
+are performed only by the task's *leader* core, which keeps each row local
+to one core (the cache-line layout lives in TraceTable).
 
-    updated = (4 * old + new) / 5        # 80% history, 20% new sample
+Searches take a :class:`~repro.core.tracetable.CostModel` — or the legacy
+metric strings ``"occupancy"`` / ``"latency"``, which map to the
+:class:`~repro.core.tracetable.Occupancy` and
+:class:`~repro.core.tracetable.Latency` models.
 
-and are performed only by the task's *leader* core, which keeps each row
-local to one core (the paper's cache-line layout; here: one C-contiguous
-numpy row per (type, core), padded to 64 bytes).
-
-Two implementations live here:
-
-* :class:`PTT` — the runtime table used by the schedulers/simulator, aware of
-  the cluster layout (valid (leader, width) pairs never straddle an LLC
-  cluster).
-* pure-JAX functional ops (:func:`ptt_update`, :func:`ptt_global_search`,
-  :func:`ptt_local_search`) — the same math as jit/vmap-able primitives for
-  the pod-scale elastic runtime (homogeneous device groups, power-of-two
-  widths), so placement decisions can be folded into compiled code.
+The pure-JAX functional ops (:func:`ptt_update`, :func:`ptt_global_search`,
+:func:`ptt_local_search`) are re-exported from
+:mod:`repro.core.tracetable` for the pod-scale elastic runtime.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 
-import jax.numpy as jnp
-
 from .places import ClusterLayout, Place
+from .tracetable import (EMA_DEN, EMA_OLD, Candidate, CostModel,
+                         EMASearchMixin, Latency, Occupancy, TraceTable,
+                         make_ptt_array, ptt_global_search, ptt_local_search,
+                         ptt_update)
 
-# EMA weight from the paper: old:new = 4:1.
-EMA_OLD = 4.0
-EMA_DEN = 5.0
+__all__ = [
+    "EMA_DEN", "EMA_OLD", "EMASearchMixin", "PTT", "PTTConfig",
+    "make_ptt_array", "ptt_global_search", "ptt_local_search", "ptt_update",
+]
 
-# Pad each (type, core) row to a multiple of 8 float64 = 64 bytes — the
-# paper's "organized to fit into cache lines" layout.
-_LANE = 8
+# legacy string metrics -> first-class cost models
+_METRICS = {"occupancy": Occupancy(), "latency": Latency()}
 
 
-class EMASearchMixin:
-    """The PTT math shared by every trace-table scale (core :class:`PTT`,
-    pod :class:`~repro.distributed.elastic.PodPTT`, fleet
-    :class:`~repro.router.FleetPTT`): the paper's EMA-1:4 update with
-    zero-bootstrap (§3.2) and the argmin search where untrained entries
-    score 0 and are therefore visited first (§3.3)."""
-
-    @staticmethod
-    def ema_merge(old, new, old_weight: float = EMA_OLD,
-                  den: float = EMA_DEN):
-        """EMA with zero-bootstrap: an untrained (0.0) entry adopts the
-        sample directly — EMA from zero would take ~10 samples to converge
-        while the entry no longer reads as "untrained".  Works on scalars
-        and numpy arrays; ``old_weight``/``den`` default to the paper's 4:1
-        (override for e.g. a fast 1:1 window)."""
-        if isinstance(old, np.ndarray):
-            return np.where(old == 0.0, new, (old_weight * old + new) / den)
-        return new if old == 0.0 else (old_weight * old + new) / den
-
-    @staticmethod
-    def argmin_search(entries):
-        """``entries``: iterable of (key, cost).  Returns the min-cost key;
-        untrained entries cost 0.0 and win, guaranteeing every valid
-        configuration is eventually trained (bootstrap, paper §3.2).
-        Costs need only support ``<`` — tuples give lexicographic
-        tie-breaking (the fleet router uses (predicted, backlog))."""
-        best, best_cost = None, None
-        for key, cost in entries:
-            if best_cost is None or cost < best_cost:
-                best, best_cost = key, cost
-        assert best is not None, "no valid entries to search"
-        return best
+def as_cost(metric: str | CostModel) -> CostModel:
+    return metric if isinstance(metric, CostModel) else _METRICS[metric]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,27 +61,23 @@ class PTTConfig:
 
 
 class PTT(EMASearchMixin):
-    """Runtime Performance Trace Table.
+    """Runtime Performance Trace Table over cores.
 
-    ``table[t][c, wi]`` is the EMA'd execution time of task type ``t``
-    launched with leader ``c`` at width ``widths[wi]``; 0.0 = untrained.
-    Invalid (leader, width) combinations (non-divisor width, misaligned
-    leader, cluster-straddling) are masked out of every search.
-    The entry count per cluster of N cores is 2N-1 for power-of-two N
-    (paper §3.3 overhead argument).
+    ``value(t, c, w)`` is the EMA'd execution time of task type ``t``
+    launched with leader ``c`` at width ``w``; 0.0 = untrained.  Invalid
+    (leader, width) combinations (non-divisor width, misaligned leader,
+    cluster-straddling) are masked out of every search by construction:
+    candidates come from ``layout.valid_places()``.
     """
 
     def __init__(self, cfg: PTTConfig):
         self.cfg = cfg
         widths = cfg.widths
         self._w2i = {w: i for i, w in enumerate(widths)}
-        nw = len(widths)
-        padded = ((nw + _LANE - 1) // _LANE) * _LANE
-        self._tab = np.zeros((cfg.num_task_types, cfg.num_cores, padded),
-                             dtype=np.float64)
-        self._nw = nw
+        self.trace = TraceTable(
+            (cfg.num_task_types, cfg.num_cores, len(widths)),
+            metrics=("latency",))
         self._places = cfg.layout.valid_places()
-        self.updates = 0
 
     # -- views ------------------------------------------------------------
     @property
@@ -123,100 +88,55 @@ class PTT(EMASearchMixin):
     def places(self) -> tuple[Place, ...]:
         return self._places
 
+    @property
+    def updates(self) -> int:
+        return self.trace.updates
+
     def value(self, task_type: int, core: int, width: int) -> float:
-        return float(self._tab[task_type, core, self._w2i[width]])
+        return self.trace.value((task_type, core, self._w2i[width]))
 
     def table(self, task_type: int) -> np.ndarray:
-        return self._tab[task_type, :, : self._nw]
+        return self.trace.array()[task_type]
 
     # -- update (leader core only; paper §3.2) -----------------------------
     def update(self, task_type: int, leader: int, width: int,
                elapsed: float) -> None:
-        wi = self._w2i[width]
-        old = self._tab[task_type, leader, wi]
-        self._tab[task_type, leader, wi] = self.ema_merge(old, elapsed)
-        self.updates += 1
+        self.trace.update((task_type, leader, self._w2i[width]), elapsed)
 
     # -- searches (paper §3.3) ---------------------------------------------
-    def global_search(self, task_type: int, metric: str = "occupancy") -> Place:
+    def _candidates(self, task_type: int, places) -> list[Candidate]:
+        return [Candidate(key=(task_type, p.leader, self._w2i[p.width]),
+                          item=p, width=p.width) for p in places]
+
+    def global_search(self, task_type: int,
+                      metric: str | CostModel = "occupancy") -> Place:
         """Best valid (leader, width) minimizing the objective.  Untrained
         entries score 0 -> visited first (bootstrap).
 
-        metric="occupancy": exec_time * width (the paper's default — minimum
-        resource occupation).  metric="latency": exec_time alone (paper §3.3
-        notes alternative objectives are possible; TTFT-critical serving uses
-        this — queue-inflated samples push the search to narrower widths
-        under load, so width adapts to load automatically)."""
-        tab = self._tab[task_type]
+        ``metric`` is a CostModel — or "occupancy" (exec_time * width, the
+        paper's default: minimum resource occupation) / "latency"
+        (exec_time alone; TTFT-critical serving — queue-inflated samples
+        push the search to narrower widths under load, so width adapts to
+        load automatically)."""
+        return self.trace.search(self._candidates(task_type, self._places),
+                                 as_cost(metric))
 
-        def entries():
-            for p in self._places:
-                cost = tab[p.leader, self._w2i[p.width]]
-                yield p, cost * p.width if metric == "occupancy" else cost
-
-        return self.argmin_search(entries())
-
-    def local_search(self, task_type: int, core: int) -> Place:
+    def local_search(self, task_type: int, core: int,
+                     metric: str | CostModel = "occupancy") -> Place:
         """Best width keeping the task in partitions containing ``core``
-        (non-critical tasks: avoid migration, only avoid oversubscription)."""
-        tab = self._tab[task_type]
+        (non-critical tasks: avoid migration, only avoid
+        oversubscription)."""
         cl = self.cfg.layout
-
-        def entries():
-            for w in cl.widths():
-                try:
-                    p = cl.place_of(core, w)
-                except ValueError:
-                    continue
-                if core in p:
-                    yield p, tab[p.leader, self._w2i[p.width]] * p.width
-
-        return self.argmin_search(entries())
+        places = []
+        for w in cl.widths():
+            try:
+                p = cl.place_of(core, w)
+            except ValueError:
+                continue
+            if core in p:
+                places.append(p)
+        return self.trace.search(self._candidates(task_type, places),
+                                 as_cost(metric))
 
     def snapshot(self) -> np.ndarray:
-        return self._tab[:, :, : self._nw].copy()
-
-
-# ---------------------------------------------------------------------------
-# Pure-JAX functional PTT — same math, jit/vmap-able; homogeneous device
-# groups with power-of-two widths (the pod-scale case).
-# ---------------------------------------------------------------------------
-
-def make_ptt_array(num_task_types: int, num_cores: int,
-                   widths: Sequence[int]) -> jnp.ndarray:
-    return jnp.zeros((num_task_types, num_cores, len(widths)), jnp.float32)
-
-
-def _valid_mask(num_cores: int, widths: tuple[int, ...]) -> jnp.ndarray:
-    cores = np.arange(num_cores)[:, None]
-    ws = np.array(widths)[None, :]
-    return jnp.asarray((cores % ws) == 0)        # (C, W) bool
-
-
-def ptt_update(table: jnp.ndarray, task_type, leader, width_idx,
-               elapsed) -> jnp.ndarray:
-    """Functional EMA update (leader-core rule is the caller's contract)."""
-    old = table[task_type, leader, width_idx]
-    new = jnp.where(old == 0.0, elapsed, (EMA_OLD * old + elapsed) / EMA_DEN)
-    return table.at[task_type, leader, width_idx].set(new)
-
-
-def ptt_global_search(table: jnp.ndarray, task_type,
-                      widths: tuple[int, ...]):
-    """argmin_{leader,width} time*width with leader-validity mask.
-    Returns (leader, width_idx)."""
-    tab = table[task_type]                              # (C, W)
-    w = jnp.asarray(widths, tab.dtype)[None, :]
-    cost = jnp.where(_valid_mask(tab.shape[0], widths), tab * w, jnp.inf)
-    flat = jnp.argmin(cost.reshape(-1))
-    return flat // len(widths), flat % len(widths)
-
-
-def ptt_local_search(table: jnp.ndarray, task_type, core,
-                     widths: tuple[int, ...]):
-    """Best width_idx among the partitions containing ``core``."""
-    ws = jnp.asarray(widths, jnp.int32)
-    leaders = (core // ws) * ws                         # (W,)
-    vals = table[task_type, leaders, jnp.arange(len(widths))]
-    cost = vals * jnp.asarray(widths, table.dtype)
-    return jnp.argmin(cost)
+        return self.trace.array().copy()

@@ -21,6 +21,7 @@ from __future__ import annotations
 from .dag import TaskNode
 from .places import ClusterLayout, Place
 from .ptt import PTT, PTTConfig
+from .tracetable import Occupancy
 
 
 class SchedulingPolicy:
@@ -63,12 +64,13 @@ class PerformanceBasedScheduler(SchedulingPolicy):
     def __init__(self, layout: ClusterLayout, num_task_types: int):
         self.layout = layout
         self.ptt = PTT(PTTConfig(layout=layout, num_task_types=num_task_types))
+        self.cost = Occupancy()          # paper §3.3: min resource occupancy
 
     def place(self, task: TaskNode, core: int, critical: bool) -> Place:
         t = int(task.kernel)
         if critical:
-            return self.ptt.global_search(t)
-        return self.ptt.local_search(t, core)
+            return self.ptt.global_search(t, self.cost)
+        return self.ptt.local_search(t, core, self.cost)
 
     def record(self, task: TaskNode, place: Place, elapsed: float) -> None:
         self.ptt.update(int(task.kernel), place.leader, place.width, elapsed)

@@ -31,7 +31,8 @@ import numpy as np
 import jax
 
 from ..core.places import ClusterLayout, homogeneous_layout
-from ..core.ptt import EMASearchMixin, PTT, PTTConfig
+from ..core.ptt import PTT, PTTConfig
+from ..core.tracetable import CostModel, EMASearchMixin, TraceTable
 
 
 # ---------------------------------------------------------------------------
@@ -79,7 +80,7 @@ class PodPTT(PTT):
     (e.g. prefill length buckets, decode, train-microbatch).  A thin
     :class:`~repro.core.ptt.PTT` subclass — one homogeneous cluster of
     groups — so the EMA/search math lives in exactly one place
-    (:class:`~repro.core.ptt.EMASearchMixin`)."""
+    (:class:`~repro.core.tracetable.TraceTable`)."""
 
     def __init__(self, num_groups: int, num_task_types: int):
         layout = homogeneous_layout(num_groups)
@@ -93,7 +94,8 @@ class PodPTT(PTT):
         self.update(task_type, leader, width, elapsed)
         self.last_update[leader:leader + width] = now
 
-    def place_critical(self, task_type: int, metric: str = "occupancy"):
+    def place_critical(self, task_type: int,
+                       metric: str | CostModel = "occupancy"):
         return self.global_search(task_type, metric=metric)
 
     def width_local(self, task_type: int, group: int):
@@ -117,8 +119,13 @@ class StragglerRebalancer(EMASearchMixin):
         self.n = n_groups
         self.total = total_microbatches
         self.hysteresis = hysteresis
-        self.t_ema = np.zeros(n_groups)          # 0 = untrained
+        # per-group EMA'd per-microbatch time; 0 = untrained
+        self.trace = TraceTable((n_groups,), metrics=("mb_time",))
         self.alloc = self._even()
+
+    @property
+    def t_ema(self) -> np.ndarray:
+        return self.trace.array()
 
     def _even(self) -> np.ndarray:
         base = self.total // self.n
@@ -128,8 +135,7 @@ class StragglerRebalancer(EMASearchMixin):
 
     def observe(self, group_times: np.ndarray) -> None:
         """group_times: wall time of each group's current allocation."""
-        per_mb = group_times / np.maximum(self.alloc, 1)
-        self.t_ema = self.ema_merge(self.t_ema, per_mb)
+        self.trace.merge_array(group_times / np.maximum(self.alloc, 1))
 
     def makespan(self, alloc: np.ndarray) -> float:
         return float(np.max(alloc * self.t_ema))
@@ -158,15 +164,32 @@ class StragglerRebalancer(EMASearchMixin):
 # ---------------------------------------------------------------------------
 
 class HeartbeatMonitor:
-    def __init__(self, n_groups: int, timeout: float):
+    """Declares a group dead after ``timeout`` without a beat.  The
+    monitor is clock-agnostic (``beat``/``check`` take the caller's
+    ``now``), so ``last`` is seeded from the *first* clock reading it
+    sees — construction ``now`` if given, else the first ``beat``/
+    ``check`` — giving never-beaten groups a full timeout of grace.
+    (The old 0.0 seed declared the whole fleet dead on the first check
+    whenever the caller's clock read beyond ``timeout`` at startup.)"""
+
+    def __init__(self, n_groups: int, timeout: float,
+                 now: float | None = None):
         self.timeout = timeout
-        self.last = np.zeros(n_groups)
+        self.last = np.full(n_groups, 0.0 if now is None else float(now))
+        self._seeded = now is not None
         self.dead: set[int] = set()
 
+    def _seed(self, now: float) -> None:
+        if not self._seeded:
+            self._seeded = True
+            self.last[:] = now
+
     def beat(self, group: int, now: float) -> None:
+        self._seed(now)
         self.last[group] = now
 
     def check(self, now: float) -> set[int]:
+        self._seed(now)
         for g in range(len(self.last)):
             if g not in self.dead and now - self.last[g] > self.timeout:
                 self.dead.add(g)

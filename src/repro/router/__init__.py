@@ -2,8 +2,12 @@
 
 The paper's scheduler at its third scale — cores -> device groups ->
 serving replicas — with interference detection and SLO-aware admission.
+Cost models and search policies come from :mod:`repro.core.tracetable`
+(re-exported here for router configuration convenience).
 """
 
+from ..core.tracetable import (CostModel, Latency, MigrationCost, Occupancy,
+                               QueueAware, TraceTable)
 from .admission import Admission, AdmissionController, SLOPolicy
 from .fleet_ptt import FleetPTT
 from .gateway import FleetGateway
@@ -15,4 +19,6 @@ __all__ = [
     "FleetPTT", "FleetGateway",
     "InterferenceConfig", "InterferenceDetector",
     "FleetRouter", "RouteDecision",
+    "CostModel", "Latency", "MigrationCost", "Occupancy", "QueueAware",
+    "TraceTable",
 ]

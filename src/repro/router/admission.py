@@ -18,9 +18,13 @@ Untrained PTT entries predict 0.0, so bootstrap traffic is always admitted
 — the same optimism that makes the paper's untrained entries globally
 optimal until visited.
 
-Classes also carry a **priority** (higher = more important).  The gateway
-uses it to shed lowest-priority work first when load must be dropped
-(first step toward weighted fair shedding across tenants).
+Classes also carry a **priority** (higher = more important), and tenants a
+**weight** (higher = larger protected share).  When load must be dropped
+the gateway sheds the lowest class priority first and, within a priority,
+the tenant with the lowest *shed debt* — each shed costs its tenant
+``weight`` debt, so over time shed counts split inversely to the weights
+(weighted fair shedding) instead of whichever tenant happens to sit at the
+head of the queue.
 """
 
 from __future__ import annotations
@@ -54,6 +58,8 @@ class SLOPolicy:
     patience: float = 3.0           # queue head-room as a multiple of slo
     tpot: dict[RequestClass, float] | None = None   # None = no TPOT budget
     priority: dict[RequestClass, int] | None = None  # None = default order
+    tenant_weight: dict | None = None   # tenant id -> share weight (>0);
+                                        # None/missing = 1.0 (equal shares)
 
     @classmethod
     def default(cls) -> "SLOPolicy":
@@ -84,6 +90,15 @@ class SLOPolicy:
         if self.priority is None:
             return _DEFAULT_PRIORITY[req_class]
         return self.priority.get(req_class, _DEFAULT_PRIORITY[req_class])
+
+    def weight_of(self, tenant) -> float:
+        """A tenant's share weight; unknown tenants weigh 1.0.  A shed
+        charges the victim's tenant ``weight`` debt, and the gateway sheds
+        from the lowest-debt tenant first — so a weight-3 tenant ends up
+        shedding ~1/3 as often as a weight-1 tenant."""
+        if self.tenant_weight is None:
+            return 1.0
+        return float(self.tenant_weight.get(tenant, 1.0))
 
 
 class AdmissionController:

@@ -1,8 +1,9 @@
 """FleetPTT — the Performance Trace Table at fleet scale.
 
-Third instantiation of the paper's data structure: cores (`core/ptt.py`) ->
-device groups (`distributed/elastic.py`) -> serving replicas.  Indexed by
-(request class, replica) with two latency rows per cell:
+Third instantiation of :class:`repro.core.tracetable.TraceTable` — cores
+(`core/ptt.py`) -> device groups (`distributed/elastic.py`) -> serving
+replicas.  Indexed by (request class, replica) with two latency rows per
+cell:
 
 * **TTFT** — time-to-first-token *per prompt token* of requests routed to
   that replica (size-normalized by the router, so a 4k-prompt prefill and a
@@ -11,11 +12,17 @@ device groups (`distributed/elastic.py`) -> serving replicas.  Indexed by
 * **TPOT** — time-per-output-token (engine decode-step latency); the
   signal for *sticky* search (non-critical, decode-heavy traffic).
 
-Math (EMA-1:4 with zero-bootstrap, argmin where untrained entries win) is
-inherited from :class:`repro.core.ptt.EMASearchMixin` — there is exactly one
-implementation across the three scales.  There is no width axis here: a
-replica is an opaque serving unit (its internal width elasticity is the
+A second single-axis table learns each replica's **per-request service
+time** (``record_service``) — the :class:`~repro.core.tracetable.QueueAware`
+cost model turns backlog counts into *seconds of work ahead* with it, which
+is what lets PTT routing beat join-shortest-queue instead of merely
+matching it.  There is no width axis here: a replica is an opaque serving
+unit (its internal width elasticity is the
 :class:`~repro.serve.scheduler.ElasticServeScheduler`'s job).
+
+All searches accept a :class:`~repro.core.tracetable.CostModel`; the
+defaults reproduce the classic behavior (QueueAware for global/ranked,
+Latency for sticky) exactly when no service rates have been recorded.
 """
 
 from __future__ import annotations
@@ -24,7 +31,10 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-from ..core.ptt import EMASearchMixin
+from ..core.tracetable import (Candidate, CostModel, EMASearchMixin,
+                               GlobalSearch, Latency, QueueAware,
+                               RankedSearch, SearchContext, StickySearch,
+                               TraceTable)
 
 
 class FleetPTT(EMASearchMixin):
@@ -40,91 +50,121 @@ class FleetPTT(EMASearchMixin):
             raise ValueError("need at least one replica")
         self.num_replicas = num_replicas
         self.num_classes = num_classes
-        self._tab = np.zeros((num_classes, num_replicas, self.NUM_METRICS),
-                             dtype=np.float64)
-        self.updates = 0
+        self._t = TraceTable((num_classes, num_replicas),
+                             metrics=("ttft", "tpot"))
+        # class-agnostic per-replica service rate: seconds per request,
+        # whatever the mix — the queue ahead of a new arrival is mixed, so
+        # the wait estimate must be too
+        self._svc = TraceTable((num_replicas,), metrics=("service",))
 
     # -- views -------------------------------------------------------------
+    @property
+    def updates(self) -> int:
+        return self._t.updates
+
     def value(self, req_class: int, replica: int, metric: int = TTFT) -> float:
-        return float(self._tab[req_class, replica, metric])
+        return self._t.value((req_class, replica), metric)
 
     def table(self, req_class: int, metric: int = TTFT) -> np.ndarray:
-        return self._tab[req_class, :, metric].copy()
+        return self._t.array(metric)[req_class].copy()
 
     def trained(self, req_class: int, replica: int,
                 metric: int = TTFT) -> bool:
-        return self._tab[req_class, replica, metric] != 0.0
+        return self._t.trained((req_class, replica), metric)
+
+    def service_time(self, replica: int) -> float:
+        """EMA'd per-request wall service time on ``replica`` (seconds;
+        0.0 = untrained)."""
+        return self._svc.value((replica,))
 
     # -- update ------------------------------------------------------------
     def update(self, req_class: int, replica: int, metric: int,
                sample: float) -> None:
-        old = self._tab[req_class, replica, metric]
-        self._tab[req_class, replica, metric] = self.ema_merge(old, sample)
-        self.updates += 1
+        self._t.update((req_class, replica), sample, metric)
+
+    def record_service(self, replica: int, seconds: float, *,
+                       units: int = 1) -> None:
+        """One completed request's wall service time on ``replica``.
+
+        ``units`` must match the unit the caller's ``backlog`` is counted
+        in: a caller passing queue *lengths* records whole-request times
+        (units=1); a caller passing queued *prompt tokens* (the gateway
+        knows every queued request's length — far sharper under mixed
+        sizes) records per-token times (units=prompt_len).  The learned
+        rate is seconds *per backlog unit* either way, so the QueueAware
+        wait term ``backlog x rate`` stays dimensionally exact."""
+        self._svc.update((replica,), seconds / max(units, 1))
 
     # -- searches ----------------------------------------------------------
-    def _candidates(self, healthy: Iterable[int] | None) -> Sequence[int]:
-        return (range(self.num_replicas) if healthy is None
-                else tuple(healthy))
+    def _candidates(self, req_class: int, healthy: Iterable[int] | None,
+                    backlog: Sequence[int] | None) -> list[Candidate]:
+        items = (range(self.num_replicas) if healthy is None
+                 else tuple(healthy))
+        return [Candidate(key=(req_class, r), item=r,
+                          tie=(backlog[r] if backlog is not None else 0))
+                for r in items]
 
-    def _cost_fn(self, req_class: int, metric: int,
-                 backlog: Sequence[int] | None):
-        """The one queue-inflated cost: latency x (1 + backlog), ties (and
-        the all-untrained bootstrap) break toward the shortest queue."""
-        tab = self._tab[req_class, :, metric]
-
-        def cost(r: int):
-            b = backlog[r] if backlog is not None else 0
-            return (tab[r] * (1 + b), b)
-
-        return cost
+    def _context(self, metric: int, backlog: Sequence[int] | None,
+                 tokens: int, current: int | None = None) -> SearchContext:
+        return SearchContext(metric=metric, backlog=backlog, tokens=tokens,
+                             current=current, service=self.service_time)
 
     def global_search(self, req_class: int, metric: int = TTFT,
                       healthy: Iterable[int] | None = None,
-                      backlog: Sequence[int] | None = None) -> int:
-        """Min-predicted-latency replica over the healthy set (critical
-        traffic; the fleet analogue of the paper's global PTT search)."""
-        cost = self._cost_fn(req_class, metric, backlog)
-        return self.argmin_search((r, cost(r))
-                                  for r in self._candidates(healthy))
+                      backlog: Sequence[int] | None = None, *,
+                      tokens: int = 1,
+                      cost: CostModel | None = None) -> int:
+        """Min-predicted-cost replica over the healthy set (critical
+        traffic; the fleet analogue of the paper's global PTT search).
+        Default cost: :class:`QueueAware` — ties (and the all-untrained
+        bootstrap) break toward the shortest queue."""
+        return self._t.search(
+            self._candidates(req_class, healthy, backlog),
+            cost if cost is not None else QueueAware(), GlobalSearch(),
+            self._context(metric, backlog, tokens))
 
     def ranked_search(self, req_class: int, metric: int = TTFT,
                       healthy: Iterable[int] | None = None,
-                      backlog: Sequence[int] | None = None) -> list[int]:
+                      backlog: Sequence[int] | None = None, *,
+                      tokens: int = 1,
+                      cost: CostModel | None = None) -> list[int]:
         """All candidates in ascending predicted-cost order (same cost as
         ``global_search``) — for callers that need a fallback chain, e.g.
         session migration trying the next-best replica when the best one
         cannot hold the session."""
-        cost = self._cost_fn(req_class, metric, backlog)
-        return sorted(self._candidates(healthy), key=cost)
+        return self._t.search(
+            self._candidates(req_class, healthy, backlog),
+            cost if cost is not None else QueueAware(), RankedSearch(),
+            self._context(metric, backlog, tokens))
 
     def sticky_search(self, req_class: int, replica: int, metric: int = TPOT,
                       healthy: Iterable[int] | None = None,
-                      migrate_ratio: float = 2.0) -> int:
+                      migrate_ratio: float = 2.0, *,
+                      backlog: Sequence[int] | None = None, tokens: int = 1,
+                      cost: CostModel | None = None) -> int:
         """Stay on ``replica`` unless it is unhealthy or the best healthy
         replica beats it by more than ``migrate_ratio`` (non-critical
         traffic: avoid migration, only avoid disasters — the fleet analogue
-        of the paper's local search)."""
-        cand = self._candidates(healthy)
-        best = self.global_search(req_class, metric, cand)
-        if replica not in cand:
-            return best
-        if not (self.trained(req_class, replica, metric)
-                and self.trained(req_class, best, metric)):
-            return replica                  # untrained: stay (bootstrap
-                                            # happens via routed traffic)
-        here = self._tab[req_class, replica, metric]
-        there = self._tab[req_class, best, metric]
-        return best if here > migrate_ratio * there else replica
+        of the paper's local search).  Pass ``backlog`` with a queue-aware
+        ``cost`` so a follow-up abandons a congested home; compose a
+        :class:`~repro.core.tracetable.MigrationCost` into ``cost`` to
+        additionally charge the KV transfer itself."""
+        return self._t.search(
+            self._candidates(req_class, healthy, backlog),
+            cost if cost is not None else Latency(),
+            StickySearch(migrate_ratio),
+            self._context(metric, backlog, tokens, current=replica))
 
     # -- admission signal --------------------------------------------------
     def predict_ttft(self, req_class: int, replica: int,
                      backlog: int = 0, *, tokens: int = 1) -> float:
         """Predicted TTFT if routed to ``replica`` with ``backlog`` requests
-        already ahead of it.  TTFT rows are **size-normalized** (the router
-        records per-prompt-token latency), so the learned per-token estimate
-        is scaled back by the request's ``tokens`` and inflated by the
-        queue.  Untrained entries predict 0.0 — optimistic, so bootstrap
-        traffic is always admitted."""
-        est = self._tab[req_class, replica, self.TTFT]
-        return float(est * max(tokens, 1) * (1 + backlog))
+        already ahead of it — the :class:`QueueAware` formula: TTFT rows
+        are **size-normalized** (per prompt token), so the estimate scales
+        back by ``tokens``; the wait is ``backlog`` x the replica's learned
+        per-request service time (falling back to count inflation until
+        that trains).  Untrained entries predict 0.0 — optimistic, so
+        bootstrap traffic is always admitted."""
+        est = self._t.value((req_class, replica), self.TTFT)
+        return float(QueueAware.predict(est, tokens, backlog,
+                                        self.service_time(replica)))

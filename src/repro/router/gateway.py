@@ -17,9 +17,14 @@ The gateway is the glue between router policy and engine mechanics:
   link degradation) is quarantined — and now *actively drained*, not just
   starved of new traffic — without any platform knowledge: the paper's
   work-stealing of started work under dynamic asymmetry, at fleet scale;
-* when load must be dropped, the **lowest-priority** held request is shed
-  first (class priorities from the SLO policy), not the head of the
-  arrival queue.
+* every harvested first token also trains the replica's **service-rate**
+  row (``record_service``), which the QueueAware cost model uses to turn
+  backlog counts into predicted seconds of wait;
+* when load must be dropped, shed order is **(class priority, tenant
+  debt)**: the lowest-priority held request goes first and, within a
+  priority, the tenant that has shed the least against its
+  ``SLOPolicy.tenant_weight`` share — weighted fair shedding, not
+  arrival-order luck.
 
 Probe requests stay pinned to their quarantined replica: they exist to
 generate the recovery signal, so migrating them off would strand the
@@ -75,6 +80,10 @@ class FleetGateway:
         self.held: deque[tuple[Request, int | None, int, float]] = deque()
         self.shed: deque[Request] = deque(maxlen=self.SHED_CAP)
         self._displaced_rids: set[int] = set()   # one displacement each
+        # weighted fair shedding: each shed charges its tenant weight_of()
+        # debt; victims come from the lowest-debt tenant first, so shed
+        # counts converge to ~1/weight shares
+        self._tenant_debt: dict = {}
         self._ttfts: dict[int, float] = {}
         self._served = 0
         self._migrations = 0
@@ -114,16 +123,28 @@ class FleetGateway:
         self._per_replica[d.replica] += 1
         self.engines[d.replica].submit(req)
 
-    # -- priority-aware shedding -------------------------------------------
+    # -- weighted fair shedding --------------------------------------------
+    def _shed_request(self, req: Request) -> None:
+        """Every shed flows through here so the victim's tenant pays its
+        ``weight_of`` debt (the fair-shedding ledger)."""
+        w = self.router.admission.policy.weight_of(req.tenant)
+        self._tenant_debt[req.tenant] = (
+            self._tenant_debt.get(req.tenant, 0.0) + w)
+        self.shed.append(req)
+
     def _displace_lower_priority(self, req_class) -> bool:
         """If a held request has strictly lower class priority, shed *it*
-        instead.  Returns True when a victim was displaced."""
+        instead — choosing, among the lowest-priority held requests, the
+        one whose tenant has the least shed debt (weighted fair order).
+        Returns True when a victim was displaced."""
         if not self.held:
             return False
         pri = self.router.admission.policy.priority_of
         cls_of = lambda r: classify_request(len(r.prompt), r.max_new)
         i_min = min(range(len(self.held)),
-                    key=lambda i: pri(cls_of(self.held[i][0])))
+                    key=lambda i: (pri(cls_of(self.held[i][0])),
+                                   self._tenant_debt.get(
+                                       self.held[i][0].tenant, 0.0)))
         victim, _, _, _ = self.held[i_min]
         victim_class = cls_of(victim)
         if pri(victim_class) >= pri(RequestClass(req_class)):
@@ -132,7 +153,7 @@ class FleetGateway:
         self._displaced_rids.discard(victim.rid)   # victim leaves the gateway
         self.router.admission.reclassify(victim_class, Admission.QUEUE,
                                          Admission.SHED)
-        self.shed.append(victim)
+        self._shed_request(victim)
         return True
 
     def _shed_or_displace(self, req: Request, req_class) -> bool:
@@ -150,7 +171,7 @@ class FleetGateway:
                                              Admission.QUEUE)
             return True
         self._displaced_rids.discard(req.rid)    # leaving the gateway
-        self.shed.append(req)
+        self._shed_request(req)
         return False
 
     # -- pump --------------------------------------------------------------
@@ -243,14 +264,23 @@ class FleetGateway:
                     c = classify_request(len(req.prompt), req.max_new)
                     dest = self.router.fleet.global_search(
                         int(c), metric=FleetPTT.TTFT, healthy=fits,
-                        backlog=self.backlog())
+                        backlog=self.backlog(), tokens=len(req.prompt))
                     self.engines[dest].submit(req)
                     continue
-                self.tracked.pop(i)
-                self._per_replica[r] -= 1        # never actually served here
                 t_arrival = t.t_arrival
                 d = self.router.route(len(req.prompt), req.max_new,
                                       backlog=self.backlog(), requeue=True)
+                # the router's overflow may re-pick the replica being
+                # drained (its drift-scaled cost still beats every
+                # congested healthy queue): honor it — the request stays
+                # and is served slowly, instead of ping-ponging
+                # queue -> held -> queue forever while the crunch lasts
+                if (d.action is Admission.ADMIT and not d.probe
+                        and d.replica == r):
+                    e.submit(req)
+                    continue
+                self.tracked.pop(i)
+                self._per_replica[r] -= 1        # never actually served here
                 # probe decisions are refused here: the probe branch would
                 # happily send the evacuated request back to an idle
                 # quarantined replica — possibly the one being drained —
@@ -327,9 +357,18 @@ class FleetGateway:
                 if len(self._ttfts) >= self.TTFT_CAP:    # evict oldest
                     self._ttfts.pop(next(iter(self._ttfts)))
                 self._ttfts[t.req.rid] = t.ttft
-                self.router.record_ttft(t.replica, t.req_class,
-                                        tok - t.t_dispatch,
+                # the learning samples span prefill-start -> first token
+                # (the engine stamps t_admit), NOT dispatch -> first
+                # token: the engine-queue wait is what QueueAware's
+                # backlog term models, so baking it into the TTFT row or
+                # the service rate would double-count congestion against
+                # busy-but-fast replicas (client-facing TTFT in
+                # ``ttfts()`` still includes every wait)
+                t0 = t.req.t_admit if t.req.t_admit is not None \
+                    else t.t_dispatch
+                self.router.record_ttft(t.replica, t.req_class, tok - t0,
                                         prompt_len=len(t.req.prompt))
+                self.router.record_service(t.replica, tok - t0)
             if t.req.done and t.ttft is not None:
                 self._served += 1       # finished: stop tracking it
             else:
@@ -352,6 +391,7 @@ class FleetGateway:
         s["served"] = self._served
         s["migrations"] = self._migrations
         s["shed_requests"] = [r.rid for r in self.shed]
+        s["tenant_shed_debt"] = dict(self._tenant_debt)
         s["per_replica"] = list(self._per_replica)
         s["utilization"] = [round(e.utilization(), 3) for e in self.engines]
         s["step_latency"] = [e.last_step_latency for e in self.engines]

@@ -18,7 +18,9 @@ frozen baseline.  Recovery samples arrive the same way the paper keeps the
 PTT trained on interfered cores: non-critical probe traffic and decode
 steps of the draining batch keep flowing.
 
-Both EMAs use :meth:`EMASearchMixin.ema_merge` — one shared implementation.
+Both EMAs are single-axis :class:`~repro.core.tracetable.TraceTable`
+instances (the baseline at the paper's 1:4 window, the fast one at 1:1 via
+the table's ``old_weight``/``den``) — one shared implementation.
 """
 
 from __future__ import annotations
@@ -28,7 +30,7 @@ from collections import deque
 
 import numpy as np
 
-from ..core.ptt import EMASearchMixin
+from ..core.tracetable import EMASearchMixin, TraceTable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,8 +47,9 @@ class InterferenceDetector(EMASearchMixin):
     def __init__(self, num_replicas: int,
                  cfg: InterferenceConfig = InterferenceConfig()):
         self.cfg = cfg
-        self.baseline = np.zeros(num_replicas)   # long EMA (1:4); 0=untrained
-        self.fast = np.zeros(num_replicas)       # fast EMA (1:1)
+        self._base = TraceTable((num_replicas,), metrics=("latency",))
+        self._fast = TraceTable((num_replicas,), metrics=("latency",),
+                                old_weight=1.0, den=2.0)
         self.samples = np.zeros(num_replicas, dtype=np.int64)
         self._drift_run = np.zeros(num_replicas, dtype=np.int64)
         self.quarantined: set[int] = set()
@@ -57,8 +60,7 @@ class InterferenceDetector(EMASearchMixin):
         """Feed one latency sample; returns "quarantine"/"readmit" when the
         replica's state flips, else None."""
         cfg = self.cfg
-        self.fast[replica] = self.ema_merge(
-            self.fast[replica], latency, old_weight=1.0, den=2.0)
+        self._fast.update((replica,), latency)
         self.samples[replica] += 1
         if replica in self.quarantined:
             # baseline frozen; watch the fast EMA for recovery.  An
@@ -77,7 +79,7 @@ class InterferenceDetector(EMASearchMixin):
         b = self.baseline[replica]
         high = b > 0.0 and latency > cfg.quarantine_ratio * b
         if not high:
-            self.baseline[replica] = self.ema_merge(b, latency)
+            self._base.update((replica,), latency)
         # the run counts consecutive high *raw samples*, not EMA readings —
         # a single spike lingers in the fast EMA for several observations
         # and would otherwise satisfy any consecutive-EMA criterion alone
@@ -104,6 +106,16 @@ class InterferenceDetector(EMASearchMixin):
             self.events.append(("quarantine", replica))
 
     # -- views -------------------------------------------------------------
+    @property
+    def baseline(self) -> np.ndarray:
+        """Long-EMA (1:4) per-replica baseline; 0 = untrained."""
+        return self._base.array()
+
+    @property
+    def fast(self) -> np.ndarray:
+        """Fast-EMA (1:1) per-replica latency — the "right now" view."""
+        return self._fast.array()
+
     def is_healthy(self, replica: int) -> bool:
         return replica not in self.quarantined
 

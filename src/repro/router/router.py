@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+from ..core.tracetable import CostModel, Latency, MigrationCost, QueueAware
 from ..serve.scheduler import RequestClass, classify_request
 from .admission import Admission, AdmissionController, SLOPolicy
 from .fleet_ptt import FleetPTT
@@ -40,14 +41,30 @@ class RouteDecision:
 class FleetRouter:
     def __init__(self, num_replicas: int, slo: SLOPolicy | None = None,
                  interference: InterferenceConfig | None = None,
-                 probe_every: int = 4):
+                 probe_every: int = 4, cost: CostModel | None = None,
+                 migration: MigrationCost | None = None):
+        """``cost``: the objective for critical (global) searches — default
+        :class:`QueueAware` (learned per-replica service rates once
+        ``record_service`` samples arrive, count inflation until then).
+        ``migration``: when given, sticky searches charge this KV-transfer
+        estimate on top of the latency objective, so a decode-heavy
+        follow-up only leaves its affinity replica when the win pays for
+        the cache move."""
         self.fleet = FleetPTT(num_replicas, num_classes=len(RequestClass))
         self.detector = InterferenceDetector(
             num_replicas, interference or InterferenceConfig())
         self.admission = AdmissionController(slo)
         self.probe_every = probe_every
-        self._seen = 0
+        self.cost = cost if cost is not None else QueueAware()
+        # sticky reads the TPOT row (absolute per-step latency, not
+        # per-token), so the value is not scaled by request size — but
+        # ctx.tokens still carries the session size for the migration term
+        sticky = QueueAware(value_per_token=False)
+        self.sticky_cost = sticky + migration if migration is not None \
+            else sticky
         self._probe_rr = 0
+        self._since_probe = 0   # requests routed while something was
+                                # quarantined since the last probe fired
 
     # -- routing -----------------------------------------------------------
     def route(self, prompt_len: int, max_new: int,
@@ -67,55 +84,115 @@ class FleetRouter:
         # probe: an occasional request visits a quarantined replica so it
         # can prove recovery — a drained quarantined replica emits no
         # decode steps, so without probes nothing would ever feed its fast
-        # EMA and it would be excluded forever.  Non-critical traffic
-        # probes at the base cadence; TTFT-critical classes probe 4x more
-        # rarely (a critical probe knowingly sacrifices its SLO, but a
-        # prefill-only workload must still be able to recover capacity).
+        # EMA and it would be excluded forever.  Probes prefer DECODE
+        # traffic (a 64-token follow-up sacrificed to a 4x straggler costs
+        # milliseconds; a 4k prefill costs nearly a second of p99):
+        # non-critical requests probe once ``probe_every`` requests have
+        # passed since the last probe, and TTFT-critical classes step in
+        # only after a long decode drought (16x cadence — a prefill-only
+        # workload must still be able to recover capacity, but it must not
+        # burn big prompts while cheap probes are flowing).
         # When ``backlog`` is provided (gateway/sim), only *idle* (drained)
         # quarantined replicas are probed: at most one outstanding probe
         # each, so the straggler is never re-loaded while it is still
         # slow.  A backlog-less caller probes unconditionally — it has no
         # queue visibility, and never probing would strand its capacity.
-        self._seen += 1
+        # The drought counter only runs while something is quarantined —
+        # otherwise healthy-era traffic would bank enough drought for the
+        # first post-quarantine request (possibly a 4k prefill) to probe
+        # instantly.
+        self._since_probe = self._since_probe + 1 if quarantined else 0
         cadence = (self.probe_every if c == RequestClass.DECODE
-                   else self.probe_every * 4)
-        if quarantined and self._seen % cadence == 0:
+                   else self.probe_every * 16)
+        if quarantined and self._since_probe >= cadence:
             idle = [r for r in quarantined
                     if backlog is None or backlog[r] == 0]
             if idle:
                 r = idle[self._probe_rr % len(idle)]
                 self._probe_rr += 1
+                self._since_probe = 0
                 if not requeue:      # requeue'd: gateway reclassifies
                     self.admission.count(c, Admission.ADMIT)
                 return RouteDecision(replica=r, req_class=c,
                                      action=Admission.ADMIT,
                                      predicted_ttft=0.0, probe=True)
 
+        pred_overflow = None     # set when overflow picks a quarantined
+                                 # replica (drift-scaled prediction)
         if c == RequestClass.DECODE:
             if affinity is not None:
+                # sticky: queue-aware (a follow-up abandons a congested
+                # home when another replica decisively wins); the
+                # migration term (when configured) charges the KV/prefix
+                # re-ingest the move would cost
                 r = self.fleet.sticky_search(c, affinity,
-                                             healthy=healthy or None)
+                                             healthy=healthy or None,
+                                             backlog=backlog,
+                                             tokens=prompt_len,
+                                             cost=self.sticky_cost)
             else:
                 r = self.fleet.global_search(c, metric=FleetPTT.TPOT,
                                              healthy=healthy or None,
-                                             backlog=backlog)
+                                             backlog=backlog,
+                                             cost=self.cost)
         else:
             # all replicas quarantined: degrade gracefully, route anyway
             r = self.fleet.global_search(c, metric=FleetPTT.TTFT,
                                          healthy=healthy or None,
-                                         backlog=backlog)
-        pred = self.fleet.predict_ttft(c, r, backlog[r] if backlog else 0,
-                                       tokens=prompt_len)
+                                         backlog=backlog, tokens=prompt_len,
+                                         cost=self.cost)
+            if quarantined and backlog is not None:
+                r, pred_overflow = self._overflow(c, r, quarantined, backlog,
+                                                  prompt_len)
+        if pred_overflow is not None:
+            pred = pred_overflow        # drift-scaled: the raw row would
+                                        # understate a straggler's TTFT to
+                                        # admission by the drift factor
+        else:
+            pred = self.fleet.predict_ttft(c, r, backlog[r] if backlog else 0,
+                                           tokens=prompt_len)
         # TPOT budget: the replica's decode-step latency row (0.0 when
-        # untrained — optimistic, like the TTFT bootstrap)
+        # untrained — optimistic, like the TTFT bootstrap); an overflow
+        # pick is drift-scaled like its TTFT — the row is healthy-era
         pred_tpot = self.fleet.value(int(RequestClass.DECODE), r,
                                      FleetPTT.TPOT)
+        if pred_overflow is not None:
+            pred_tpot *= max(self.detector.drift(r), 1.0)
         action = (self.admission.evaluate(c, pred, pred_tpot) if requeue
                   else self.admission.decide(c, pred, pred_tpot))
         return RouteDecision(
             replica=r if action is Admission.ADMIT else None,
             req_class=c, action=action, predicted_ttft=pred,
             predicted_tpot=pred_tpot)
+
+    def _overflow(self, c, best: int, quarantined, backlog,
+                  prompt_len: int) -> tuple[int, float | None]:
+        """Quarantine costs capacity: under crunch, a quarantined replica
+        whose predicted TTFT — its learned rows scaled by the detector's
+        live drift ratio (Fig. 8's interference signal as a multiplier) —
+        *strictly* beats the best healthy prediction takes the request.
+        The paper's slow core keeps serving cheap work instead of idling;
+        a 512-token prefill eats a 4x straggler penalty happily when every
+        healthy queue holds seconds of 4k prefills.  Untrained quarantined
+        rows never win (no evidence -> probes only).  Returns the chosen
+        replica and, when it is a quarantined one, its drift-scaled
+        prediction (the raw row would understate the TTFT admission sees
+        by the drift factor); (best, None) otherwise."""
+        pred_best = self.fleet.predict_ttft(int(c), best, backlog[best],
+                                            tokens=prompt_len)
+        if pred_best <= 0.0:
+            return best, None                # bootstrap: stay on healthy
+        pick, pick_pred = best, pred_best
+        for q in quarantined:
+            if not (self.fleet.trained(int(c), q, FleetPTT.TTFT)
+                    and self.fleet.service_time(q) > 0.0):
+                continue
+            drift = max(self.detector.drift(q), 1.0)
+            p = drift * self.fleet.predict_ttft(int(c), q, backlog[q],
+                                                tokens=prompt_len)
+            if p < pick_pred:
+                pick, pick_pred = q, p
+        return pick, (pick_pred if pick != best else None)
 
     # -- feedback ----------------------------------------------------------
     def record_ttft(self, replica: int, req_class: RequestClass,
@@ -141,6 +218,17 @@ class FleetRouter:
         self.fleet.update(int(RequestClass.DECODE), replica, FleetPTT.TPOT,
                           latency)
         self.detector.observe(replica, latency)
+
+    def record_service(self, replica: int, seconds: float, *,
+                       units: int = 1) -> None:
+        """One request's wall service time on ``replica`` — trains the
+        per-replica service rate the :class:`QueueAware` cost turns
+        backlog into predicted *seconds of wait* with (the lever that
+        separates PTT routing from join-shortest-queue).  ``units`` is the
+        request's size in whatever unit the caller's ``backlog`` uses
+        (1 = whole requests; prompt tokens when the backlog is
+        token-weighted)."""
+        self.fleet.record_service(replica, seconds, units=units)
 
     # -- views -------------------------------------------------------------
     def healthy(self) -> list[int]:

@@ -41,6 +41,7 @@ class Request:
     rid: int
     prompt: np.ndarray           # (prompt_len,)
     max_new: int
+    tenant: int | str = 0        # fair-shedding bucket (SLOPolicy weights)
     extras: dict = dataclasses.field(default_factory=dict)
                                  # extra prefill inputs without the batch
                                  # axis (e.g. vlm "image_embeds")
@@ -49,6 +50,9 @@ class Request:
     t_first: float | None = None   # wall time the first token was produced
                                    # (stamped at prefill, so fleet TTFT is
                                    # not inflated by other admissions)
+    t_admit: float | None = None   # wall time the engine started prefill:
+                                   # t_first - t_admit is a pure service
+                                   # sample, free of engine-queue wait
 
 
 @dataclasses.dataclass
@@ -124,6 +128,7 @@ class ServeEngine:
         while slots and self.queue:
             req = self.queue.popleft()
             t0 = time.perf_counter()
+            req.t_admit = t0
             d = self.scheduler.schedule_prefill(len(req.prompt))
             batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
             for name, val in req.extras.items():

@@ -20,6 +20,7 @@ import dataclasses
 import enum
 
 from ..core.places import Place
+from ..core.tracetable import Latency
 from ..distributed.elastic import PodPTT
 
 
@@ -59,7 +60,7 @@ class ElasticServeScheduler:
         # width/placement under load; paper §3.3 "alternative optimization
         # strategies are also possible")
         t = classify_prefill(prompt_len)
-        return Decision(place=self.ptt.place_critical(int(t), "latency"),
+        return Decision(place=self.ptt.place_critical(int(t), Latency()),
                         task_type=t)
 
     def schedule_decode(self, group: int) -> Decision:

@@ -39,6 +39,26 @@ def test_heartbeat_marks_dead():
     assert hb.check(now=6.0) == {2}
 
 
+def test_heartbeat_never_beaten_group_not_dead_at_startup():
+    """Regression: ``last`` seeded 0.0 made any monitor constructed at
+    wall-clock now > timeout declare every never-beaten group dead on the
+    first check.  Seeding from the first clock reading gives a full
+    timeout of grace — and a group still silent after that is genuinely
+    dead."""
+    hb = HeartbeatMonitor(n_groups=2, timeout=5.0, now=100.0)
+    assert hb.check(now=103.0) == set()         # within grace: alive
+    hb.beat(0, 104.0)
+    assert hb.check(now=105.0) == set()         # group 1 still in grace
+    assert hb.check(now=108.0) == {1}           # grace expired, no beat ever
+                                                # (group 0 beat at 104: alive)
+    # legacy two-arg construction (no ``now``): the first check's clock
+    # reading seeds the epoch, so a wall-clock caller is safe too
+    hb = HeartbeatMonitor(n_groups=2, timeout=5.0)
+    assert hb.check(now=1e9) == set()           # seeds here, nobody dead
+    hb.beat(0, 1e9 + 1.0)
+    assert hb.check(now=1e9 + 6.0) == {1}       # grace from the seed only
+
+
 def test_serve_scheduler_follows_ptt():
     s = ElasticServeScheduler(num_groups=4)
     # train the table: group 2 fastest for short prefills at width 2

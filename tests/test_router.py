@@ -240,7 +240,9 @@ def test_router_sheds_and_queues_via_predictions():
 # ---------------------------------------------------------------------------
 
 def test_router_critical_avoids_quarantined_replica():
-    # probe_every=2 -> critical classes probe every 8th request
+    # probe_every=2 -> critical classes may probe only after a 2*16-request
+    # decode drought (probes prefer cheap decode traffic; a prefill-only
+    # workload must still recover quarantined capacity eventually)
     router = FleetRouter(num_replicas=3, slo=SLOPolicy.unlimited(),
                          probe_every=2)
     for r in range(3):
@@ -252,15 +254,42 @@ def test_router_critical_avoids_quarantined_replica():
     for _ in range(6):
         router.record_step(0, 0.05)
     assert 0 in router.detector.quarantined
-    decisions = [router.route(prompt_len=512, max_new=8) for _ in range(8)]
+    decisions = [router.route(prompt_len=512, max_new=8) for _ in range(40)]
     # regular critical traffic avoids the quarantined replica; only
-    # sacrificial probes (every probe_every-th request) may visit it
+    # sacrificial probes (after the decode drought) may visit it
     for d in decisions:
         if d.probe:
             assert d.replica == 0
         else:
             assert d.replica != 0
     assert any(d.probe for d in decisions)       # recovery path stays alive
+    # the drought gate keeps critical probes rare: at most 2 in 40
+    assert sum(d.probe for d in decisions) <= 2
+
+
+def test_router_probes_prefer_decode_traffic():
+    """While decode probes are flowing, critical requests never probe —
+    sacrificing a 64-token follow-up to a straggler costs milliseconds, a
+    4k prefill costs the p99."""
+    router = FleetRouter(num_replicas=2, slo=SLOPolicy.unlimited(),
+                         probe_every=2)
+    for r in range(2):
+        for _ in range(6):
+            router.record_step(r, 0.01)
+    for _ in range(6):
+        router.record_step(0, 0.1)
+    assert 0 in router.detector.quarantined
+    probes = []
+    for i in range(32):
+        # alternate decode-heavy and critical prefill traffic
+        if i % 2 == 0:
+            d = router.route(prompt_len=4, max_new=64)
+        else:
+            d = router.route(prompt_len=4096, max_new=8)
+        if d.probe:
+            probes.append(d.req_class)
+    assert probes                                  # probing happens
+    assert all(c == RequestClass.DECODE for c in probes)
 
 
 def test_router_probes_quarantined_with_noncritical():
@@ -359,6 +388,48 @@ def test_gateway_priority_shedding_drops_lowest_class_first():
     assert n["queued"][RequestClass.PREFILL_SHORT] == 1
     assert n["shed"][RequestClass.PREFILL_SHORT] == 0
     assert all(v >= 0 for b in n.values() for v in b.values())
+
+
+def test_tenant_weighted_fair_shedding():
+    """Shed order is (class priority, tenant debt): every shed charges the
+    victim's tenant its SLOPolicy weight, and the next victim comes from
+    the lowest-debt tenant — so a weight-3 tenant sheds ~1/3 as often as a
+    weight-1 tenant instead of whoever sits at the queue head."""
+    cfg = get_config("smollm-135m", reduced=True)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    slo = SLOPolicy(ttft={RequestClass.PREFILL_SHORT: 0.1,
+                          RequestClass.PREFILL_LONG: 0.1,
+                          RequestClass.DECODE: 1.0}, patience=3.0,
+                    tenant_weight={"gold": 3.0, "bronze": 1.0})
+    gw = FleetGateway([ServeEngine(m, params, max_batch=2, max_seq=24)],
+                      router=FleetRouter(1, slo=slo))
+    # low-priority decode-heavy requests from both tenants, all QUEUE'd
+    # (per-token est 0.125 -> predicted 2.0: between SLO 1.0 and patience)
+    gw.router.record_ttft(0, RequestClass.DECODE, 2.0, prompt_len=16)
+    lows = []
+    for i in range(8):
+        t = "gold" if i % 2 == 0 else "bronze"
+        r = Request(rid=i, prompt=rng.integers(0, cfg.vocab, 16),
+                    max_new=64, tenant=t)
+        lows.append(r)
+        assert gw.submit(r).action is Admission.QUEUE
+    # hopeless short prefills displace one held victim each
+    gw.router.record_ttft(0, RequestClass.PREFILL_SHORT, 1.0 * 512,
+                          prompt_len=512)
+    for j in range(4):
+        gw.submit(Request(rid=100 + j,
+                          prompt=rng.integers(0, cfg.vocab, 512), max_new=8))
+    by_tenant = {"gold": 0, "bronze": 0}
+    for r in gw.shed:
+        if r.rid < 100:
+            by_tenant[r.tenant] += 1
+    # 4 victims at weights 3:1 -> debts equalize at bronze=3, gold=1
+    assert by_tenant == {"gold": 1, "bronze": 3}, by_tenant
+    debt = gw.stats()["tenant_shed_debt"]
+    assert debt["gold"] == pytest.approx(3.0)      # 1 shed x weight 3
+    assert debt["bronze"] == pytest.approx(3.0)    # 3 sheds x weight 1
 
 
 def test_classify_request_fleet_split():

@@ -1,0 +1,325 @@
+"""TraceTable API (paper §3.2/§3.3 as one store + pluggable objectives):
+store semantics, cost-model behavior, and golden equivalence — the new
+``TraceTable`` + ``CostModel`` searches must reproduce the legacy
+``PTT.global_search``/``local_search`` and ``FleetPTT.global_search`` /
+``ranked_search``/``sticky_search`` decisions on recorded traces, across
+all five model families."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.places import ClusterLayout, homogeneous_layout
+from repro.core.ptt import PTT, PTTConfig
+from repro.core.tracetable import (Candidate, GlobalSearch, Latency,
+                                   MigrationCost, Occupancy, QueueAware,
+                                   RankedSearch, SearchContext, StickySearch,
+                                   Sum, TraceTable)
+from repro.router.fleet_ptt import FleetPTT
+
+# the five families (dense transformer, pure SSM, hybrid, MoE, VLM): each
+# contributes a differently-shaped recorded trace — latency scale from the
+# config's true size, prompt mix from its modality
+FAMILIES = ["smollm-135m", "mamba2-130m", "jamba-v0.1-52b",
+            "granite-moe-1b-a400m", "llama-3.2-vision-90b"]
+
+
+# ---------------------------------------------------------------------------
+# store semantics
+# ---------------------------------------------------------------------------
+
+def test_tracetable_ema_and_bootstrap():
+    t = TraceTable((2, 3), metrics=("a", "b"))
+    t.update((0, 1), 10.0, "a")                  # first sample adopted
+    assert t.value((0, 1), "a") == 10.0
+    t.update((0, 1), 5.0, "a")                   # (4*10 + 5) / 5
+    assert t.value((0, 1), "a") == pytest.approx(9.0)
+    assert t.value((0, 1), "b") == 0.0           # metrics independent
+    assert t.updates == 2
+    assert t.trained((0, 1), "a") and not t.trained((0, 1), "b")
+    mask = t.trained_mask("a")
+    assert mask.shape == (2, 3) and mask[0, 1] and mask.sum() == 1
+
+
+def test_tracetable_custom_window_and_merge_array():
+    fast = TraceTable((3,), old_weight=1.0, den=2.0)     # 1:1 window
+    fast.update((0,), 1.0)
+    fast.update((0,), 3.0)
+    assert fast.value((0,)) == pytest.approx(2.0)
+    t = TraceTable((3,))
+    t.merge_array(np.array([1.0, 2.0, 3.0]))
+    np.testing.assert_allclose(t.array(), [1.0, 2.0, 3.0])
+    t.merge_array(np.array([6.0, 2.0, 3.0]))             # EMA elementwise
+    np.testing.assert_allclose(t.array(), [2.0, 2.0, 3.0])
+
+
+def test_tracetable_snapshot_restore():
+    t = TraceTable((2, 2), metrics=("m",))
+    t.update((0, 0), 4.0)
+    snap = t.snapshot()
+    t.update((0, 0), 100.0)
+    t.update((1, 1), 7.0)
+    t.restore(snap)
+    assert t.value((0, 0)) == 4.0
+    assert not t.trained((1, 1))
+
+
+# ---------------------------------------------------------------------------
+# cost models
+# ---------------------------------------------------------------------------
+
+def _cand(item, width=1, tie=0.0):
+    return Candidate(key=(item,), item=item, width=width, tie=tie)
+
+
+def test_cost_models_basic():
+    ctx = SearchContext()
+    assert Latency().cost(2.0, _cand(0), ctx) == 2.0
+    assert Occupancy().cost(2.0, _cand(0, width=4), ctx) == 8.0
+
+
+def test_queue_aware_count_fallback_and_service_rates():
+    # no service rates: classic count inflation value*tokens*(1+b)
+    ctx = SearchContext(backlog=[0, 3], tokens=100)
+    q = QueueAware()
+    assert q.cost(0.01, _cand(0), ctx) == pytest.approx(1.0)
+    assert q.cost(0.01, _cand(1), ctx) == pytest.approx(4.0)
+    # with learned rates: wait = backlog x per-unit service time
+    svc = {0: 0.5, 1: 0.02}.get
+    ctx = SearchContext(backlog=[2, 3], tokens=100, service=svc)
+    assert q.cost(0.01, _cand(0), ctx) == pytest.approx(1.0 + 2 * 0.5)
+    assert q.cost(0.01, _cand(1), ctx) == pytest.approx(1.0 + 3 * 0.02)
+    # a short queue on a slow replica outweighs a long one on a fast one
+    assert q.cost(0.01, _cand(0), ctx) > q.cost(0.01, _cand(1), ctx)
+    # absolute-value mode (TPOT rows): tokens scale composed terms like
+    # MigrationCost, never the per-step value itself
+    qa = QueueAware(value_per_token=False)
+    assert qa.cost(0.01, _cand(1), ctx) == pytest.approx(0.01 + 3 * 0.02)
+    sticky = qa + MigrationCost(per_token=1e-4)
+    ctx = SearchContext(backlog=[0, 0], tokens=4096, current=1,
+                        service=svc)
+    # leaving home now pays the full 4096-token KV transfer, not 1 token
+    assert sticky.cost(0.01, _cand(0), ctx) == pytest.approx(
+        0.01 + 4096 * 1e-4)
+    assert sticky.cost(0.01, _cand(1), ctx) == pytest.approx(0.01)
+
+
+def test_migration_cost_and_sum_composition():
+    ctx = SearchContext(tokens=1000, current=1)
+    mig = MigrationCost(per_token=1e-4, fixed=0.05)
+    assert mig.cost(9.9, _cand(1), ctx) == 0.0           # staying is free
+    assert mig.cost(9.9, _cand(0), ctx) == pytest.approx(0.15)
+    combined = Latency() + mig
+    assert isinstance(combined, Sum)
+    assert combined.cost(0.2, _cand(0), ctx) == pytest.approx(0.35)
+    assert combined.cost(0.2, _cand(1), ctx) == pytest.approx(0.2)
+    three = combined + Occupancy()
+    assert three.cost(0.2, _cand(1, width=2), ctx) == pytest.approx(0.6)
+
+
+def test_sticky_policy_untrained_stays_home():
+    t = TraceTable((1, 3))
+    t.update((0, 2), 0.001)                  # best replica trained...
+    cands = [Candidate(key=(0, r), item=r) for r in range(3)]
+    # ...but home (1) untrained: stay (bootstrap via routed traffic)
+    ctx = SearchContext(current=1)
+    assert t.search(cands, Latency(), StickySearch(2.0), ctx) == 1
+    # home trained and decisively beaten (all candidates trained — an
+    # untrained candidate wins the argmin and the guard stays home, same
+    # as the legacy trained() check): migrate
+    t.update((0, 0), 0.5)
+    t.update((0, 1), 1.0)
+    assert t.search(cands, Latency(), StickySearch(2.0), ctx) == 2
+    # home not a candidate (unhealthy): best wins
+    ctx = SearchContext(current=99)
+    assert t.search(cands[2:], Latency(), StickySearch(2.0), ctx) == 2
+
+
+# ---------------------------------------------------------------------------
+# legacy reference implementations (the three deleted per-scale copies,
+# reproduced verbatim as oracles)
+# ---------------------------------------------------------------------------
+
+def _legacy_ema(old, new):
+    return new if old == 0.0 else (4.0 * old + new) / 5.0
+
+
+class LegacyCorePTT:
+    def __init__(self, layout, num_task_types):
+        widths = layout.widths()
+        self._w2i = {w: i for i, w in enumerate(widths)}
+        self._tab = np.zeros((num_task_types, layout.num_cores, len(widths)))
+        self._places = layout.valid_places()
+        self._layout = layout
+
+    def update(self, t, leader, width, elapsed):
+        wi = self._w2i[width]
+        self._tab[t, leader, wi] = _legacy_ema(self._tab[t, leader, wi],
+                                               elapsed)
+
+    def global_search(self, t, metric="occupancy"):
+        best, best_cost = None, None
+        for p in self._places:
+            c = self._tab[t, p.leader, self._w2i[p.width]]
+            c = c * p.width if metric == "occupancy" else c
+            if best_cost is None or c < best_cost:
+                best, best_cost = p, c
+        return best
+
+    def local_search(self, t, core):
+        best, best_cost = None, None
+        for w in self._layout.widths():
+            try:
+                p = self._layout.place_of(core, w)
+            except ValueError:
+                continue
+            if core not in p:
+                continue
+            c = self._tab[t, p.leader, self._w2i[p.width]] * p.width
+            if best_cost is None or c < best_cost:
+                best, best_cost = p, c
+        return best
+
+
+class LegacyFleetPTT:
+    def __init__(self, num_replicas, num_classes):
+        self.n = num_replicas
+        self._tab = np.zeros((num_classes, num_replicas, 2))
+
+    def update(self, c, r, m, sample):
+        self._tab[c, r, m] = _legacy_ema(self._tab[c, r, m], sample)
+
+    def _cost(self, c, m, backlog):
+        tab = self._tab[c, :, m]
+
+        def cost(r):
+            b = backlog[r] if backlog is not None else 0
+            return (tab[r] * (1 + b), b)
+        return cost
+
+    def global_search(self, c, m=0, healthy=None, backlog=None):
+        cand = range(self.n) if healthy is None else tuple(healthy)
+        cost = self._cost(c, m, backlog)
+        best, best_cost = None, None
+        for r in cand:
+            if best_cost is None or cost(r) < best_cost:
+                best, best_cost = r, cost(r)
+        return best
+
+    def ranked_search(self, c, m=0, healthy=None, backlog=None):
+        cand = range(self.n) if healthy is None else tuple(healthy)
+        return sorted(cand, key=self._cost(c, m, backlog))
+
+    def sticky_search(self, c, replica, m=1, healthy=None,
+                      migrate_ratio=2.0):
+        cand = range(self.n) if healthy is None else tuple(healthy)
+        best = self.global_search(c, m, cand)
+        if replica not in cand:
+            return best
+        if self._tab[c, replica, m] == 0.0 or self._tab[c, best, m] == 0.0:
+            return replica
+        here, there = self._tab[c, replica, m], self._tab[c, best, m]
+        return best if here > migrate_ratio * there else replica
+
+    def predict_ttft(self, c, r, backlog=0, tokens=1):
+        return float(self._tab[c, r, 0] * max(tokens, 1) * (1 + backlog))
+
+
+# ---------------------------------------------------------------------------
+# per-family recorded traces
+# ---------------------------------------------------------------------------
+
+def _family_trace(arch, n_events=400):
+    """A recorded (update, search) trace shaped by the family's config:
+    latency scale follows the model's true size (layers x width), prompt
+    mix follows its modality (VLM pays image tokens, SSM favors long
+    prompts).  No model is built — the trace drives the *tables*."""
+    cfg = get_config(arch, reduced=False)
+    rng = np.random.default_rng(abs(hash(arch)) % 2 ** 32)
+    scale = cfg.n_layers * cfg.d_model / 1e6
+    prompts = {"vlm": (cfg.n_image_tokens + 64, 4096),
+               "ssm": (2048, 32768), "hybrid": (1024, 16384)}.get(
+                   cfg.family, (128, 4096))
+    events = []
+    for _ in range(n_events):
+        kind = rng.choice(["update", "global", "local", "ranked", "sticky"])
+        plen = int(rng.integers(*prompts))
+        lat = float(scale * plen * rng.lognormal(0.0, 0.4) * 1e-6)
+        events.append((kind, int(rng.integers(0, 3)),        # task/class
+                       int(rng.integers(0, 8)),              # core/replica
+                       plen, lat,
+                       [int(b) for b in rng.integers(0, 6, size=8)]))
+    return events
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_golden_core_ptt_matches_legacy(arch):
+    """New PTT (TraceTable + Occupancy/Latency) vs the legacy loop, step
+    for step on one recorded trace per family."""
+    layout = ClusterLayout(clusters=((0, 1), (2, 3, 4, 5), (6, 7)))
+    new = PTT(PTTConfig(layout=layout, num_task_types=3))
+    old = LegacyCorePTT(layout, num_task_types=3)
+    for kind, t, core, plen, lat, _ in _family_trace(arch):
+        if kind == "update":
+            p = new.places[(core + plen) % len(new.places)]
+            new.update(t, p.leader, p.width, lat)
+            old.update(t, p.leader, p.width, lat)
+        else:
+            got = new.global_search(t, "occupancy" if plen % 2 else
+                                    "latency")
+            want = old.global_search(t, "occupancy" if plen % 2 else
+                                     "latency")
+            assert (got.leader, got.width) == (want.leader, want.width)
+            core = core % layout.num_cores
+            got, want = new.local_search(t, core), old.local_search(t, core)
+            assert (got.leader, got.width) == (want.leader, want.width)
+    np.testing.assert_allclose(new.trace.array(), old._tab)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_golden_fleet_ptt_matches_legacy(arch):
+    """New FleetPTT (TraceTable + QueueAware/StickySearch) vs the legacy
+    hand-rolled (latency*(1+backlog), backlog) cost, on one recorded trace
+    per family — global, ranked, sticky, and predict_ttft all agree."""
+    new = FleetPTT(num_replicas=8, num_classes=3)
+    old = LegacyFleetPTT(num_replicas=8, num_classes=3)
+    healthy_sets = [None, [0, 2, 4, 6], [1, 3, 5, 7], list(range(1, 8))]
+    for i, (kind, c, r, plen, lat, backlog) in enumerate(
+            _family_trace(arch)):
+        healthy = healthy_sets[i % len(healthy_sets)]
+        if kind == "update":
+            m = i % 2
+            new.update(c, r, m, lat)
+            old.update(c, r, m, lat)
+        elif kind == "ranked":
+            assert (new.ranked_search(c, 0, healthy, backlog)
+                    == old.ranked_search(c, 0, healthy, backlog))
+        elif kind == "sticky":
+            assert (new.sticky_search(c, r, 1, healthy)
+                    == old.sticky_search(c, r, 1, healthy))
+        else:
+            assert (new.global_search(c, 0, healthy, backlog)
+                    == old.global_search(c, 0, healthy, backlog))
+            assert new.predict_ttft(c, r, backlog[r], tokens=plen) == (
+                pytest.approx(old.predict_ttft(c, r, backlog[r],
+                                               tokens=plen)))
+    np.testing.assert_allclose(new._t.array(0), old._tab[..., 0])
+    np.testing.assert_allclose(new._t.array(1), old._tab[..., 1])
+
+
+def test_fleet_service_rates_change_the_decision():
+    """The upgrade the legacy cost could not express: with per-replica
+    service rates trained, a short queue on a slow replica loses to a
+    longer queue on a fast one — count inflation alone picks the other
+    way."""
+    f = FleetPTT(num_replicas=2, num_classes=1)
+    for r in (0, 1):
+        f.update(0, r, FleetPTT.TTFT, 0.001)     # equal per-token speed
+    backlog = [1, 3]
+    # counts only: replica 0's shorter queue wins
+    assert f.global_search(0, backlog=backlog, tokens=100) == 0
+    # replica 0 is a 4x straggler per learned service rate: its 1-deep
+    # queue holds more *seconds* than replica 1's 3-deep queue
+    f.record_service(0, 0.8)
+    f.record_service(1, 0.05)
+    assert f.global_search(0, backlog=backlog, tokens=100) == 1
