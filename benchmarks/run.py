@@ -14,7 +14,7 @@ import traceback
 
 from . import (fig5_heatmap, fig6_kernels, fig7_speedup, fig8_interference,
                fig9_vgg_scaling, fig10_widths, fleet_routing, kernel_bench,
-               pod_serving, pod_straggler, roofline)
+               pod_serving, pod_straggler, roofline, serve_decode)
 
 MODULES = (
     ("fig5_heatmap", fig5_heatmap),
@@ -28,6 +28,7 @@ MODULES = (
     ("pod_serving", pod_serving),
     ("pod_straggler", pod_straggler),
     ("roofline", roofline),
+    ("serve_decode", serve_decode),
 )
 
 

@@ -1,0 +1,132 @@
+"""Serving decode fast-path benchmark: legacy per-step decode vs the fused
+path (donated KV cache, on-device greedy sampling, k-token scan chunks).
+
+Drives a real :class:`~repro.serve.ServeEngine` on the reduced dense model
+at batch 4 (the acceptance configuration) and measures steady-state decode
+only — prefill/admission steps are excluded, compile time is paid by a
+warm-up engine before any clock starts.  Reported per path:
+
+* **tokens/s** — decoded tokens over summed step wall time;
+* **p50/p99 per-token step latency** — each step's wall time divided by its
+  chunk size, so chunked and per-token paths are comparable (the same
+  normalization the engine feeds the interference detector).
+
+Token streams are asserted identical across every path (the fast path must
+be a pure perf change), and the fused path must beat the legacy path:
+>= 1.0x in ``--quick`` (CI smoke on shared runners), >= 1.5x in a full run.
+Writes ``BENCH_serve.json`` — the serve-decode perf trajectory artifact
+next to ``BENCH_fleet.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import row
+
+ARCH = "smollm-135m"
+BATCH = 4
+MAX_SEQ = 160
+PROMPT_LEN = 8
+CHUNKS = (1, 4)              # fused chunk sizes measured (k=1 isolates the
+                             # donation + on-device-sampling win; k=4 adds
+                             # dispatch amortization)
+
+
+def _build():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config(ARCH, reduced=True)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _run_engine(cfg, m, params, *, fused: bool, chunk: int, max_new: int):
+    """Decode ``max_new`` tokens for BATCH prompts; returns per-step wall
+    times (decode steps only), tokens/s, and the token streams."""
+    from repro.serve import Request, ServeEngine
+
+    rng = np.random.default_rng(0)
+    engine = ServeEngine(m, params, max_batch=BATCH, max_seq=MAX_SEQ,
+                         decode_chunk=chunk, fused=fused)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, PROMPT_LEN),
+                    max_new=max_new) for i in range(BATCH)]
+    for r in reqs:
+        engine.submit(r)
+    engine.step()                      # admission + first decode: excluded
+                                       # (prefill-dominated, not steady state)
+    steps, tokens, elapsed = [], 0, 0.0
+    while engine.active_count():
+        before = sum(len(r.out_tokens) for r in reqs)
+        t0 = time.perf_counter()
+        engine.step()
+        dt = time.perf_counter() - t0
+        produced = sum(len(r.out_tokens) for r in reqs) - before
+        if produced:
+            steps.append(dt / engine.decode_chunk)   # per-token latency
+            tokens += produced
+            elapsed += dt
+    return {
+        "tokens": tokens,
+        "tok_s": tokens / elapsed if elapsed else 0.0,
+        "p50_ms": 1e3 * float(np.percentile(steps, 50)) if steps else 0.0,
+        "p99_ms": 1e3 * float(np.percentile(steps, 99)) if steps else 0.0,
+        "streams": [list(r.out_tokens) for r in reqs],
+    }
+
+
+def main(quick: bool = False) -> None:
+    cfg, m, params = _build()
+    max_new = 32 if quick else 128
+    # warm-up: pay every jit compile (legacy decode + each fused chunk)
+    for fused, chunk in [(False, 1)] + [(True, k) for k in CHUNKS]:
+        _run_engine(cfg, m, params, fused=fused, chunk=chunk, max_new=12)
+
+    results = {"legacy": _run_engine(cfg, m, params, fused=False, chunk=1,
+                                     max_new=max_new)}
+    for k in CHUNKS:
+        results[f"fused_k{k}"] = _run_engine(cfg, m, params, fused=True,
+                                             chunk=k, max_new=max_new)
+    # the fast path must be a pure perf change: identical greedy streams
+    ref = results["legacy"]["streams"]
+    for name, res in results.items():
+        assert res["streams"] == ref, f"{name} diverged from legacy tokens"
+
+    legacy = results["legacy"]["tok_s"]
+    best_name = max((n for n in results if n != "legacy"),
+                    key=lambda n: results[n]["tok_s"])
+    speedup = results[best_name]["tok_s"] / legacy
+    for name, res in results.items():
+        row(f"serve_decode_{name}", 1e6 / max(res["tok_s"], 1e-9),
+            f"tok_s={res['tok_s']:.0f};p50={res['p50_ms']:.3f}ms;"
+            f"p99={res['p99_ms']:.3f}ms;n_tok={res['tokens']}")
+    row("serve_decode_speedup", 1e6 / results[best_name]["tok_s"],
+        f"best={best_name};vs_legacy={speedup:.2f}x;batch={BATCH}")
+
+    floor = 1.0 if quick else 1.5
+    assert speedup >= floor, (
+        f"fused decode must be >= {floor}x legacy at batch {BATCH}: "
+        f"got {speedup:.2f}x")
+
+    bench = {
+        "arch": ARCH, "reduced": True, "batch": BATCH,
+        "max_new": max_new, "quick": quick,
+        "best": best_name, "speedup_vs_legacy": speedup,
+        **{name: {k: v for k, v in res.items() if k != "streams"}
+           for name, res in results.items()},
+    }
+    out = os.environ.get("BENCH_SERVE_OUT", "BENCH_serve.json")
+    with open(out, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,10 +3,13 @@
 #   ops.py    - jit'd public wrapper (interpret=True off-TPU for validation)
 #   ref.py    - pure-jnp oracle the kernel is tested against
 #
-# The four kernels mirror the paper's kernel classes adapted to the LM stack:
+# The kernels mirror the paper's kernel classes adapted to the LM stack:
 #   matmul          - compute-bound  (paper: 64x64 MatMul -> MXU GEMM)
 #   bitonic_sort    - cache-bound    (paper: 262KB sort -> in-VMEM bitonic)
 #   stream_copy     - bandwidth      (paper: 16.8MB copy -> HBM streaming)
 #   flash_attention - the LM-scale perf-critical kernel (VMEM-tiled online
 #                     softmax; eliminates the score-tile HBM traffic the
 #                     dry-run roofline exposes)
+#   ragged_decode   - serving decode attention: K/V blocks are read only up
+#                     to each slot's position (scalar-prefetch clamp) instead
+#                     of masking all of Smax — the fleet's hot path

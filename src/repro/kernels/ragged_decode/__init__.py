@@ -1,0 +1,3 @@
+from .ops import force_pallas, ragged_decode_attention
+
+__all__ = ["ragged_decode_attention", "force_pallas"]

@@ -15,8 +15,11 @@ Every family module provides::
 On top of those, every :class:`Model` exposes per-slot session helpers
 (``extract_session`` / ``insert_session``) that slice one sequence's cache
 state out of / into a batch cache — the substrate for ragged continuous
-batching and live session migration between serving replicas.
-"""
+batching and live session migration between serving replicas — and
+``decode_fused``, the serving fast path: a donated-cache, on-device-greedy,
+k-token ``lax.scan`` over the family's single-step ``decode`` (the family
+modules therefore keep ``decode`` position-pure: all cross-step state lives
+in the carried cache/pos, never in Python)."""
 
 from __future__ import annotations
 
@@ -24,6 +27,7 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from . import jamba, mamba2, moe, sessions, transformer, vlm
@@ -40,6 +44,14 @@ class Model:
                                   # engine/replica built over it shares one
                                   # compiled executable, and the executable's
                                   # lifetime is the Model's (no global cache)
+    decode_fused: Callable        # (params, token (B,1), pos (B,), cache, k)
+                                  # -> (tokens (B,k), next_token, pos, cache)
+                                  # greedy fast path: cache DONATED (updated
+                                  # in place, the argument buffer is dead
+                                  # after the call), argmax on device, k
+                                  # decode steps per dispatch (lax.scan) —
+                                  # one host sync per k tokens, not one
+                                  # logits transfer per token
     cache_spec: Callable
     cache_logical_axes: Callable
     cache_seq_axes: Callable
@@ -55,6 +67,30 @@ _FAMILY = {
     "hybrid": jamba,
     "vlm": vlm,
 }
+
+
+def _fused_decode(cfg: ModelConfig, mod) -> Callable:
+    """Build the donated k-token greedy decode: a ``lax.scan`` over the
+    family's single-step ``decode`` with the argmax inside the jit, so
+    logits never leave the device and the KV/state cache is updated in
+    place (``donate_argnums``) instead of being copied every token.
+
+    ``k`` is static (one executable per chunk size).  The caller must treat
+    the cache argument as CONSUMED — pass the returned cache forward and
+    never touch the old reference (sessions are safe: they hold host-numpy
+    copies, see :mod:`repro.models.sessions`).
+    """
+    def fused(params, token, pos, cache, k: int):
+        def step(carry, _):
+            tok, p, c = carry
+            logits, c = mod.decode(cfg, params, tok, p, c)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return (nxt[:, None], p + 1, c), nxt
+        (token, pos, cache), toks = jax.lax.scan(
+            step, (token, pos, cache), None, length=k)
+        return jnp.moveaxis(toks, 0, 1), token, pos, cache
+
+    return jax.jit(fused, static_argnums=4, donate_argnums=3)
 
 
 def get_model(cfg: ModelConfig) -> Model:
@@ -73,6 +109,7 @@ def get_model(cfg: ModelConfig) -> Model:
     return Model(cfg=cfg, init=bind(mod.init), forward=bind(mod.forward),
                  prefill=bind(mod.prefill), decode=bind(mod.decode),
                  decode_jit=jax.jit(bind(mod.decode)),
+                 decode_fused=_fused_decode(cfg, mod),
                  cache_spec=bind(mod.cache_spec),
                  cache_logical_axes=bind(mod.cache_logical_axes),
                  cache_seq_axes=bind(mod.cache_seq_axes),

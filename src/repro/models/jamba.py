@@ -210,6 +210,10 @@ def prefill(cfg: ModelConfig, p, batch):
 
 
 def decode(cfg: ModelConfig, p, token, pos, cache):
+    # single-step body of Model.decode_fused's k-token scan: the hybrid
+    # cache (attention KV + per-mamba-layer SSM/conv state) is donated
+    # whole — every leaf returned here must keep its input shape/dtype so
+    # XLA can alias the buffers
     x = L.embed_tokens(cfg, p["tok"], token)
     pos = L.position_vector(pos, x.shape[0])   # per-slot ragged positions
     positions = pos[:, None]

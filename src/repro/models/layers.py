@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..distributed.sharding import constrain
+from ..kernels.ragged_decode import ragged_decode_attention
 
 Params = Any   # nested dict pytree
 Specs = Any
@@ -290,24 +291,22 @@ def decode_attention(cfg: ModelConfig, q: jax.Array, k_cache: jax.Array,
     q: (B, 1, Hq, hd); caches: (B, Smax, Hkv, hd) constrained to shard Smax
     over the `model` axis — the softmax max/sum reductions become psums over
     the model axis, i.e. flash-decode's partial-softmax combine, inserted by
-    SPMD partitioning.  ``pos`` is a scalar (shared position) or a (B, 1)
-    per-slot position column (ragged batch: each slot masks independently).
+    SPMD partitioning.  ``pos`` is a scalar (shared position), a (B,)
+    vector, or a (B, 1) per-slot position column (ragged batch: each slot
+    masks independently).
+
+    The score/softmax math lives in :mod:`repro.kernels.ragged_decode`: the
+    Pallas kernel (TPU, or interpret mode under
+    ``ragged_decode.force_pallas``) reads K/V blocks only up to each slot's
+    position; elsewhere the jnp reference — the exact masked-dense math this
+    function always computed — keeps the single-device path byte-stable.
     """
     B, _, Hq, hd = q.shape
-    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
-    rep = Hq // Hkv
     k_cache = constrain(k_cache, "batch", "seq_mp", None, None)
     v_cache = constrain(v_cache, "batch", "seq_mp", None, None)
-    qr = q.reshape(B, Hkv, rep, hd)
-    s = jnp.einsum("bgrh,bsgh->bgrs", qr, k_cache,
-                   preferred_element_type=jnp.float32) / math.sqrt(hd)
-    # include the current position; pos is a scalar or a (B, 1) column, so
-    # valid broadcasts to (1|B, Smax) and aligns with s's (B, g, r, Smax)
-    valid = jnp.arange(Smax)[None, :] <= pos
-    s = jnp.where(valid[:, None, None], s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bgrs,bsgh->bgrh", p.astype(v_cache.dtype), v_cache,
-                     preferred_element_type=jnp.float32)
+    pos_vec = position_vector(pos, B)
+    out = ragged_decode_attention(q.reshape(B, Hq, hd), k_cache, v_cache,
+                                  pos_vec)
     return out.reshape(B, 1, Hq * hd).astype(q.dtype)
 
 

@@ -276,6 +276,10 @@ def prefill(cfg: ModelConfig, p, batch):
 
 
 def decode(cfg: ModelConfig, p, token, pos, cache):
+    """One recurrence step.  ``pos`` is unused state-wise (the SSM state is
+    O(1) in position) but part of the uniform decode signature the fused
+    k-token scan (``Model.decode_fused``) advances; all cross-step state
+    lives in the carried (ssm, conv) cache, which the fast path donates."""
     x = L.embed_tokens(cfg, p["tok"], token)
 
     def body(x, xs):

@@ -384,6 +384,10 @@ def prefill(cfg: ModelConfig, p, batch):
 
 
 def decode(cfg: ModelConfig, p, token, pos, cache):
+    # single-step body of Model.decode_fused's k-token scan (donated cache):
+    # decode-time MoE keeps no-drop capacity, so a chunk's tokens stay
+    # batch-composition independent — migration/truncation mid-chunk cannot
+    # change any other slot's stream
     x = L.embed_tokens(cfg, p["tok"], token)
     pos = L.position_vector(pos, x.shape[0])   # per-slot ragged positions
     if cfg.moe_every == 1:

@@ -13,6 +13,16 @@ Which axis is the batch axis comes from the family's
 from the family's ``cache_seq_axes`` (``None`` for fixed-size state such as
 SSM recurrent state, conv windows, or a VLM's static image-token cross-KV —
 those leaves are carried whole).
+
+Donation discipline: the fused decode path (``Model.decode_fused``)
+*donates* the engine's batch cache, so any device buffer an old cache
+reference pointed at is dead after the next decode dispatch.  Sessions are
+immune by construction — :func:`extract_session` materializes **host numpy
+copies** at extraction time (never views of device buffers), and
+:func:`insert_session` builds a fresh cache functionally with ``.at[].set``
+rather than writing into the (possibly donated) target.  Keep it that way:
+returning a device view from either function would turn every migration
+into a use-after-donation.
 """
 
 from __future__ import annotations

@@ -130,7 +130,10 @@ def decode(cfg: ModelConfig, p, token, pos, cache):
     caches ride the scan carry and are updated in place (token-slice DUS),
     so per-layer traffic is the attention read + a 1-token write.  ``pos``
     is a scalar or a per-slot (B,) vector — ragged batches decode each slot
-    at its own position."""
+    at its own position.  This is also the single-step body
+    ``Model.decode_fused`` scans k times with the cache donated: all
+    cross-step state must stay in (pos, cache) so the scan carry is the
+    whole contract."""
     x = L.embed_tokens(cfg, p["tok"], token)
     pos = L.position_vector(pos, x.shape[0])
 

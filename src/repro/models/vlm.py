@@ -166,6 +166,10 @@ def prefill(cfg: ModelConfig, p, batch):
 
 
 def decode(cfg: ModelConfig, p, token, pos, cache):
+    # single-step body of Model.decode_fused's k-token scan (donated
+    # cache): the static cross-KV leaves are returned unchanged, which
+    # under donation is a trivial input->output alias — no copy, and no
+    # image re-ingest anywhere in the chunk
     x = L.embed_tokens(cfg, p["tok"], token)
     pos = L.position_vector(pos, x.shape[0])   # per-slot ragged positions
     positions = pos[:, None]

@@ -95,6 +95,17 @@ class FleetPTT(EMASearchMixin):
         wait term ``backlog x rate`` stays dimensionally exact."""
         self._svc.update((replica,), seconds / max(units, 1))
 
+    def decay_service(self, replica: int, target: float) -> None:
+        """EMA the stored service rate toward ``target`` without a real
+        completion sample — the router calls this while ``replica`` is
+        quarantined (target = healthy-era rate x live drift ratio), so the
+        stale rate *decays toward the interference-implied one in the
+        store* instead of being drift-scaled at every read.  Untrained rows
+        stay untrained (a decay is not evidence; adopting it would break
+        the optimistic bootstrap)."""
+        if target > 0.0 and self._svc.value((replica,)) > 0.0:
+            self._svc.update((replica,), target)
+
     # -- searches ----------------------------------------------------------
     def _candidates(self, req_class: int, healthy: Iterable[int] | None,
                     backlog: Sequence[int] | None) -> list[Candidate]:
@@ -126,16 +137,18 @@ class FleetPTT(EMASearchMixin):
     def ranked_search(self, req_class: int, metric: int = TTFT,
                       healthy: Iterable[int] | None = None,
                       backlog: Sequence[int] | None = None, *,
-                      tokens: int = 1,
+                      tokens: int = 1, current: int | None = None,
                       cost: CostModel | None = None) -> list[int]:
         """All candidates in ascending predicted-cost order (same cost as
         ``global_search``) — for callers that need a fallback chain, e.g.
         session migration trying the next-best replica when the best one
-        cannot hold the session."""
+        cannot hold the session.  ``current`` marks the session's present
+        home so a composed :class:`~repro.core.tracetable.MigrationCost`
+        can charge every off-home candidate for the cache move."""
         return self._t.search(
             self._candidates(req_class, healthy, backlog),
             cost if cost is not None else QueueAware(), RankedSearch(),
-            self._context(metric, backlog, tokens))
+            self._context(metric, backlog, tokens, current=current))
 
     def sticky_search(self, req_class: int, replica: int, metric: int = TPOT,
                       healthy: Iterable[int] | None = None,
@@ -157,14 +170,19 @@ class FleetPTT(EMASearchMixin):
 
     # -- admission signal --------------------------------------------------
     def predict_ttft(self, req_class: int, replica: int,
-                     backlog: int = 0, *, tokens: int = 1) -> float:
+                     backlog: int = 0, *, tokens: int = 1,
+                     value_scale: float = 1.0) -> float:
         """Predicted TTFT if routed to ``replica`` with ``backlog`` requests
         already ahead of it — the :class:`QueueAware` formula: TTFT rows
         are **size-normalized** (per prompt token), so the estimate scales
         back by ``tokens``; the wait is ``backlog`` x the replica's learned
         per-request service time (falling back to count inflation until
         that trains).  Untrained entries predict 0.0 — optimistic, so
-        bootstrap traffic is always admitted."""
-        est = self._t.value((req_class, replica), self.TTFT)
+        bootstrap traffic is always admitted.  ``value_scale`` inflates the
+        TTFT *row* term only (the router's quarantine overflow scales the
+        healthy-era row by the live drift ratio; the wait term needs no
+        scaling because the stored service rate decays during quarantine —
+        see :meth:`decay_service`)."""
+        est = self._t.value((req_class, replica), self.TTFT) * value_scale
         return float(QueueAware.predict(est, tokens, backlog,
                                         self.service_time(replica)))

@@ -7,8 +7,12 @@ The gateway is the glue between router policy and engine mechanics:
   admission decision) and stamps its arrival time;
 * ``pump`` retries gateway-queued requests, **drains quarantined replicas
   by migrating their live decode sessions** to the PTT-best healthy
-  replica (`ServeEngine.export_session` -> `import_session`), steps every
-  engine once, and harvests TTFT observations: client-facing TTFT
+  replica (`ServeEngine.export_session` -> `import_session`) — when the
+  router carries a :class:`~repro.core.tracetable.MigrationCost`, the
+  drain placement charges the KV move (``fixed + per_token x pos``)
+  against the predicted win, so a session only leaves when migrating
+  pays for itself — steps every engine once, and harvests TTFT
+  observations: client-facing TTFT
   (arrival -> first token, including gateway queue time) for ``ttfts()``,
   dispatch -> first token for the FleetPTT so admission's backlog term
   doesn't double-count queueing;
@@ -38,6 +42,7 @@ import time
 from collections import deque
 from typing import Sequence
 
+from ..core.tracetable import QueueAware
 from ..serve.engine import Request, ServeEngine
 from ..serve.scheduler import RequestClass, classify_request
 from .admission import Admission
@@ -210,13 +215,41 @@ class FleetGateway:
                 return i
         return None
 
+    def _migration_pays(self, source: int, healthy: Sequence[int],
+                        pos: int) -> bool:
+        """Charge the router's :class:`MigrationCost` in the drain
+        placement: rank the healthy replicas *and the quarantined source
+        itself* under ``QueueAware + MigrationCost`` (TPOT metric; the
+        source's row keeps training on its inflated drain/probe steps, so
+        its cost reflects the interference without any drift hack).  Every
+        off-source candidate is charged ``fixed + per_token x pos`` for the
+        KV move; staying home is free — so a near-finished session with a
+        deep cache stays and drains slowly when no healthy replica wins by
+        more than the transfer costs.  Free moves (no MigrationCost
+        configured) or an untrained source row always migrate — quarantine
+        itself is the evidence the source is slow."""
+        mig = self.router.migration
+        c = int(RequestClass.DECODE)
+        if mig is None or not self.router.fleet.trained(c, source,
+                                                        FleetPTT.TPOT):
+            return True
+        order = self.router.fleet.ranked_search(
+            c, metric=FleetPTT.TPOT, healthy=[*healthy, source],
+            backlog=self.backlog(), tokens=pos, current=source,
+            cost=QueueAware(value_per_token=False) + mig)
+        return order[0] != source
+
     def _place_session(self, sess, source: int,
                        healthy: Sequence[int]) -> int | None:
         """Import ``sess`` into the first healthy replica — in the fleet
         PTT's predicted-TPOT cost order (``ranked_search``, the same cost
         routing uses) — whose cache can hold its remaining budget; back
         onto ``source`` when nowhere fits (a near-max_seq session finishes
-        where it is).  Returns the destination or None."""
+        where it is).  Returns the destination or None.  No MigrationCost
+        enters this ranking: the session is already exported (host numpy),
+        so the move is sunk and charges every destination equally — the
+        pay-for-the-move decision is :meth:`_migration_pays`, taken
+        *before* the export."""
         for dest in self.router.fleet.ranked_search(
                 int(RequestClass.DECODE), metric=FleetPTT.TPOT,
                 healthy=healthy, backlog=self.backlog()):
@@ -324,6 +357,11 @@ class FleetGateway:
                 remaining = max(t.req.max_new - len(t.req.out_tokens), 0)
                 if not any(self.engines[h].can_hold(pos, remaining)
                            for h in healthy):
+                    continue
+                # the move must pay for itself: when a MigrationCost is
+                # configured and staying home ranks best, skip the export
+                # (the session drains slowly where its cache already is)
+                if not self._migration_pays(r, healthy, pos):
                     continue
                 sess = e.export_session(t.req.rid)
                 dest = self._place_session(sess, r, healthy)

@@ -58,13 +58,21 @@ class FleetRouter:
         self.cost = cost if cost is not None else QueueAware()
         # sticky reads the TPOT row (absolute per-step latency, not
         # per-token), so the value is not scaled by request size — but
-        # ctx.tokens still carries the session size for the migration term
+        # ctx.tokens still carries the session size for the migration term.
+        # The gateway also charges `migration` in its quarantine-drain
+        # placement (a session only leaves a drained replica when the win
+        # pays for the KV move)
+        self.migration = migration
         sticky = QueueAware(value_per_token=False)
         self.sticky_cost = sticky + migration if migration is not None \
             else sticky
         self._probe_rr = 0
         self._since_probe = 0   # requests routed while something was
                                 # quarantined since the last probe fired
+        # healthy-era service rate snapshot per quarantined replica: the
+        # decay target is anchor x drift (decaying the live row by the
+        # ratio every sample would compound without bound)
+        self._svc_anchor: dict[int, float] = {}
 
     # -- routing -----------------------------------------------------------
     def route(self, prompt_len: int, max_new: int,
@@ -187,9 +195,17 @@ class FleetRouter:
             if not (self.fleet.trained(int(c), q, FleetPTT.TTFT)
                     and self.fleet.service_time(q) > 0.0):
                 continue
+            # the healthy-era TTFT row is scaled by the live drift ratio;
+            # the wait term is NOT — the stored service rate decays toward
+            # drift x anchor while quarantined, so scaling it again here
+            # would double-charge the queue.  Tick the decay from here too:
+            # a fully drained replica emits no step samples, and a frozen
+            # healthy-era rate would understate its wait by the drift
+            # factor exactly when overflow is deciding whether to load it
+            self._decay_quarantined_service(q)
             drift = max(self.detector.drift(q), 1.0)
-            p = drift * self.fleet.predict_ttft(int(c), q, backlog[q],
-                                                tokens=prompt_len)
+            p = self.fleet.predict_ttft(int(c), q, backlog[q],
+                                        tokens=prompt_len, value_scale=drift)
             if p < pick_pred:
                 pick, pick_pred = q, p
         return pick, (pick_pred if pick != best else None)
@@ -213,11 +229,36 @@ class FleetRouter:
                           ttft / max(prompt_len, 1))
 
     def record_step(self, replica: int, latency: float) -> None:
-        """Engine decode-step latency: trains the TPOT row and is the
-        homogeneous per-replica signal the interference detector watches."""
+        """Engine decode-step latency (normalized per token by the engine):
+        trains the TPOT row and is the homogeneous per-replica signal the
+        interference detector watches.  While the replica is quarantined,
+        each sample also *decays* its stored service rate toward
+        ``healthy-era anchor x live drift`` — completions stop flowing off
+        a drained replica, so without this the rate would stay frozen at
+        its healthy value and every read would have to re-scale it by the
+        drift (the old read-time hack)."""
         self.fleet.update(int(RequestClass.DECODE), replica, FleetPTT.TPOT,
                           latency)
         self.detector.observe(replica, latency)
+        if replica in self.detector.quarantined:
+            self._decay_quarantined_service(replica)
+        else:
+            # re-admitted (possibly by this very sample): stop decaying and
+            # let real completion samples re-train the row
+            self._svc_anchor.pop(replica, None)
+
+    def _decay_quarantined_service(self, replica: int) -> None:
+        """One bounded decay tick for a quarantined replica's service rate:
+        EMA toward ``healthy-era anchor x live drift`` (the anchor is
+        snapshotted at the first tick; decaying the live row by the ratio
+        each tick would compound without bound).  Ticked from step samples
+        AND from overflow reads, so a drained-idle replica's rate freshens
+        the moment anything asks about it."""
+        anchor = self._svc_anchor.setdefault(
+            replica, self.fleet.service_time(replica))
+        if anchor > 0.0:
+            self.fleet.decay_service(
+                replica, anchor * max(self.detector.drift(replica), 1.0))
 
     def record_service(self, replica: int, seconds: float, *,
                        units: int = 1) -> None:

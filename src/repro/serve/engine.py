@@ -7,9 +7,18 @@ each width-w place holds a compiled executable pair):
   prompt** regardless of length or current batch occupancy — prefill runs
   per request and its KV cache is inserted into the slot's rows of the
   batch cache (``Model.insert_session``);
-* every engine step decodes one token for the whole active batch at
-  **per-slot positions** (each slot masks/writes at its own position, so a
-  slot admitted mid-flight decodes next to slots deep into generation);
+* every engine step decodes a **chunk of ``decode_chunk`` tokens** for the
+  whole active batch at **per-slot positions** (each slot masks/writes at
+  its own position, so a slot admitted mid-flight decodes next to slots
+  deep into generation).  The default path is ``Model.decode_fused``: the
+  cache is *donated* into the jit (updated in place — no per-token copy of
+  every layer's KV), greedy sampling runs on device, and ``cur_token`` /
+  ``pos`` stay device-resident between chunks — the only host transfer per
+  step is the ``(B, k)`` block of token ids.  A slot that reaches its
+  ``max_new`` (or the cache edge) mid-chunk keeps only the tokens up to
+  that point; the surplus the chunk decoded past it is truncated.
+  ``fused=False`` keeps the legacy per-token path (undonated
+  ``Model.decode_jit`` + host argmax) for A/B benchmarking;
 * finished sequences (max_new reached) free their slots immediately;
 * a live request can leave the engine as a :class:`Session`
   (``export_session``) — tokens, position, and its KV/state slice pulled to
@@ -69,11 +78,14 @@ class Session:
 
 class ServeEngine:
     def __init__(self, model: Model, params, max_batch: int, max_seq: int,
-                 num_groups: int = 1):
+                 num_groups: int = 1, decode_chunk: int = 1,
+                 fused: bool = True):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
+        self.decode_chunk = max(int(decode_chunk), 1)
+        self.fused = fused
         self.scheduler = ElasticServeScheduler(num_groups)
         self.queue: deque[Request] = deque()
         self.sessions_in: deque[Session] = deque()   # imported, not yet slotted
@@ -81,15 +93,26 @@ class ServeEngine:
         self.cache = None
         self.pos = np.zeros(max_batch, dtype=np.int32)
         self.cur_token = np.zeros((max_batch, 1), dtype=np.int32)
-        # the Model owns one jitted decode: replicas sharing a Model share
-        # the compiled executable, and it dies with the Model
+        # device-resident mirrors of cur_token/pos for the fused path: they
+        # ride the decode outputs between chunks and are re-uploaded from
+        # the host arrays only after a slot-changing event (admission,
+        # finish, export) marks them dirty
+        self._dev_tok = None
+        self._dev_pos = None
+        self._dev_dirty = True
+        # the Model owns the jitted decodes: replicas sharing a Model share
+        # the compiled executables, and they die with the Model
         self._decode = model.decode_jit
+        self._decode_fused = model.decode_fused
         # fleet surface (router/gateway): called with each step's *decode*
-        # latency (admission/prefill excluded — the interference detector
-        # needs a homogeneous per-replica signal, and an admission-heavy
-        # step would read as a latency spike on a healthy replica).  Steps
-        # that run no decode (idle, or every admission finished at prefill)
-        # leave the hook uncalled and last_step_latency untouched.
+        # latency normalized **per token** (elapsed / decode_chunk), so the
+        # interference detector's signal stays comparable across replicas
+        # running different chunk sizes (admission/prefill excluded — the
+        # detector needs a homogeneous per-replica signal, and an
+        # admission-heavy step would read as a latency spike on a healthy
+        # replica).  Steps that run no decode (idle, or every admission
+        # finished at prefill) leave the hook uncalled and
+        # last_step_latency untouched.
         self.on_step_latency = None
         self.last_step_latency = 0.0
 
@@ -148,6 +171,7 @@ class ServeEngine:
             self.active[slot] = req
             self.pos[slot] = len(req.prompt)
             self.cur_token[slot, 0] = next_tok
+            self._dev_dirty = True
 
     # -- session migration -------------------------------------------------
     def export_session(self, rid: int) -> Session:
@@ -162,6 +186,8 @@ class ServeEngine:
                     cache=self.model.extract_session(self.cache, slot, pos))
                 self.active[slot] = None
                 self.pos[slot] = 0
+                self.cur_token[slot, 0] = 0
+                self._dev_dirty = True
                 return sess
         raise KeyError(f"rid {rid} is not active on this engine")
 
@@ -220,37 +246,77 @@ class ServeEngine:
         self.active[slot] = sess.req
         self.pos[slot] = sess.pos
         self.cur_token[slot, 0] = sess.cur_token
+        self._dev_dirty = True
 
     # -- decode loop ---------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration: admit + decode one token for the batch at
-        per-slot positions.  Returns number of active sequences."""
+        """One engine iteration: admit + decode one ``decode_chunk``-token
+        chunk for the batch at per-slot positions.  Returns number of active
+        sequences.
+
+        Fused path (default): one ``Model.decode_fused`` dispatch decodes
+        the whole chunk with the cache donated (in-place update) and greedy
+        sampling on device; the ``(B, k)`` token ids are the chunk's single
+        host transfer.  Slots that finish mid-chunk keep only their tokens
+        up to the finish; the surplus the chunk decoded past it is
+        truncated (and the freed slot is re-synced to device via the dirty
+        flag before the next chunk).  ``last_step_latency`` and the
+        ``on_step_latency`` hook report the decode latency **per token**
+        (elapsed / chunk), keeping the interference signal comparable
+        across chunk sizes."""
         self._admit()
         n_active = self.active_count()
         if n_active == 0:
             return 0
         d = self.scheduler.schedule_decode(group=0)
         t0 = time.perf_counter()
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(self.cur_token), jnp.asarray(self.pos),
-            self.cache)
+        if self.fused:
+            k = self.decode_chunk
+            if self._dev_dirty or self._dev_tok is None:
+                self._dev_tok = jnp.asarray(self.cur_token)
+                self._dev_pos = jnp.asarray(self.pos)
+                self._dev_dirty = False
+            toks_dev, self._dev_tok, self._dev_pos, self.cache = (
+                self._decode_fused(self.params, self._dev_tok, self._dev_pos,
+                                   self.cache, k))
+            toks = np.asarray(toks_dev)          # the chunk's ONE host sync
+        else:
+            # legacy per-token path (A/B baseline): undonated decode, the
+            # full logits row crosses to host, argmax there
+            k = 1
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(self.cur_token),
+                jnp.asarray(self.pos), self.cache)
+            toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))[:, None]
         decode_elapsed = time.perf_counter() - t0
         self.scheduler.record(d, decode_elapsed, time.perf_counter())
-        toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for i, req in enumerate(self.active):
             if req is None:
                 continue
-            req.out_tokens.append(int(toks[i]))
-            self.pos[i] += 1
-            self.cur_token[i, 0] = int(toks[i])
-            if (len(req.out_tokens) >= req.max_new
-                    or self.pos[i] >= self.max_seq - 1):
-                req.done = True
-                self.active[i] = None
-                self.pos[i] = 0
-        self.last_step_latency = decode_elapsed
+            for j in range(k):
+                req.out_tokens.append(int(toks[i, j]))
+                self.pos[i] += 1
+                self.cur_token[i, 0] = int(toks[i, j])
+                if (len(req.out_tokens) >= req.max_new
+                        or self.pos[i] >= self.max_seq - 1):
+                    req.done = True              # surplus chunk tokens (j+1
+                    self.active[i] = None        # onward) are truncated
+                    self.pos[i] = 0
+                    self.cur_token[i, 0] = 0
+                    self._dev_dirty = True
+                    break
+        if self.fused and any(r is None for r in self.active):
+            # keep idle slots' device pos pinned at 0: the fused scan
+            # advances every slot's pos unconditionally, so without this
+            # re-sync a long-idle slot's garbage decode would creep across
+            # the whole cache and end up attending (and, on TPU, DMA'ing)
+            # all of Smax every chunk — two tiny int32 uploads per step
+            # buy back the ragged clamp for partially-empty batches
+            self._dev_dirty = True
+        per_token = decode_elapsed / k
+        self.last_step_latency = per_token
         if self.on_step_latency is not None:
-            self.on_step_latency(decode_elapsed)
+            self.on_step_latency(per_token)
         return n_active
 
     def run_until_drained(self, max_steps: int = 10000) -> None:

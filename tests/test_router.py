@@ -13,7 +13,7 @@ from repro.distributed.elastic import PodPTT, StragglerRebalancer
 from repro.models import get_model
 from repro.router import (Admission, AdmissionController, FleetGateway,
                           FleetPTT, FleetRouter, InterferenceConfig,
-                          InterferenceDetector, SLOPolicy)
+                          InterferenceDetector, MigrationCost, SLOPolicy)
 from repro.serve import Request, ServeEngine
 from repro.serve.scheduler import RequestClass, classify_request
 
@@ -430,6 +430,106 @@ def test_tenant_weighted_fair_shedding():
     debt = gw.stats()["tenant_shed_debt"]
     assert debt["gold"] == pytest.approx(3.0)      # 1 shed x weight 3
     assert debt["bronze"] == pytest.approx(3.0)    # 3 sheds x weight 1
+
+
+def test_service_rate_decays_during_quarantine():
+    """While a replica is quarantined its completions stop, so the stored
+    service rate would stay frozen at the healthy-era value; record_step
+    must decay it toward (anchor x drift) in the store — bounded, not
+    compounding — and stop decaying once the replica is re-admitted."""
+    router = FleetRouter(num_replicas=2, slo=SLOPolicy.unlimited())
+    for _ in range(8):
+        router.record_service(0, 1.0)            # healthy rate: 1 s/request
+        router.record_step(0, 0.01)
+    anchor = router.fleet.service_time(0)
+    assert anchor == pytest.approx(1.0)
+    while router.detector.is_healthy(0):         # 4x interference
+        router.record_step(0, 0.04)
+    for _ in range(40):                          # sustained quarantine
+        router.record_step(0, 0.04)
+    drift = router.detector.drift(0)
+    decayed = router.fleet.service_time(0)
+    assert decayed > 1.5 * anchor                # rate decayed upward...
+    assert decayed <= anchor * drift * 1.01      # ...but bounded by the
+                                                 # drift target, NOT compounding
+    # overflow predictions read the decayed rate directly: only the TTFT
+    # row term is drift-scaled at read time now
+    assert router.fleet.predict_ttft(0, 0, backlog=2) == pytest.approx(
+        2 * decayed)
+    # recovery: re-admission clears the anchor, real samples re-train
+    for _ in range(20):
+        router.record_step(0, 0.01)
+        if router.detector.is_healthy(0):
+            break
+    assert router.detector.is_healthy(0)
+    assert 0 not in router._svc_anchor
+    for _ in range(20):
+        router.record_service(0, 1.0)
+    assert router.fleet.service_time(0) == pytest.approx(1.0, rel=0.05)
+
+
+def test_decay_service_leaves_untrained_rows_untrained():
+    f = FleetPTT(num_replicas=2, num_classes=1)
+    f.decay_service(0, 4.0)
+    assert f.service_time(0) == 0.0              # bootstrap preserved
+    f.record_service(0, 2.0)
+    f.decay_service(0, 8.0)                      # EMA toward the target
+    assert f.service_time(0) == pytest.approx((4 * 2.0 + 8.0) / 5)
+
+
+def _gateway_with_live_victim(migration, seed):
+    """Two engines, trained near-equal TPOT rows, one live decode session
+    on a force-quarantined victim; returns (gw, engines, victim, req)."""
+    cfg = get_config("smollm-135m", reduced=True)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(seed))
+    engines = [ServeEngine(m, params, max_batch=2, max_seq=48)
+               for _ in range(2)]
+    gw = FleetGateway(engines, router=FleetRouter(2, migration=migration))
+    rng = np.random.default_rng(seed)
+    req = Request(rid=0, prompt=rng.integers(0, cfg.vocab, 6), max_new=12)
+    gw.submit(req)
+    for _ in range(3):
+        gw.pump()
+    victim = next(i for i in range(2) if engines[i].active_count())
+    # both TPOT rows trained and equal: without a migration charge the
+    # healthy replica wins the drain ranking, with a big one it cannot
+    for r in range(2):
+        for _ in range(4):
+            gw.router.fleet.update(int(RequestClass.DECODE), r,
+                                   FleetPTT.TPOT, 0.01)
+    gw.router.detector.force_quarantine(victim)
+    return gw, engines, victim, req
+
+
+def test_drain_charges_migration_cost_stay_home():
+    """ROADMAP leftover: the gateway's quarantine-drain placement must
+    charge MigrationCost.  With a transfer cost that dwarfs any predicted
+    win, the live session stays and drains on the quarantined replica."""
+    gw, engines, victim, req = _gateway_with_live_victim(
+        MigrationCost(fixed=100.0, per_token=1.0), seed=11)
+    gw.pump()
+    assert engines[victim].active_count() == 1   # stayed home
+    assert gw.stats()["migrations"] == 0
+    gw.run_until_drained(max_steps=300)
+    assert req.done and len(req.out_tokens) >= 12
+
+
+def test_drain_migrates_when_move_is_cheap():
+    """Same setup, negligible transfer cost: the drain moves the session
+    (and the default no-MigrationCost router keeps the legacy always-move
+    behavior, covered by test_gateway_migrates_live_sessions_...)."""
+    gw, engines, victim, req = _gateway_with_live_victim(
+        MigrationCost(fixed=1e-9, per_token=0.0), seed=11)
+    # the victim's TPOT row degrades 5x: moving now pays for itself
+    for _ in range(8):
+        gw.router.fleet.update(int(RequestClass.DECODE), victim,
+                               FleetPTT.TPOT, 0.05)
+    gw.pump()
+    assert engines[victim].active_count() == 0
+    assert gw.stats()["migrations"] == 1
+    gw.run_until_drained(max_steps=300)
+    assert req.done
 
 
 def test_classify_request_fleet_split():
