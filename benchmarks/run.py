@@ -14,7 +14,8 @@ import traceback
 
 from . import (fig5_heatmap, fig6_kernels, fig7_speedup, fig8_interference,
                fig9_vgg_scaling, fig10_widths, fleet_routing, kernel_bench,
-               pod_serving, pod_straggler, roofline, serve_decode)
+               pod_serving, pod_straggler, region_routing, roofline,
+               serve_decode)
 
 MODULES = (
     ("fig5_heatmap", fig5_heatmap),
@@ -27,6 +28,7 @@ MODULES = (
     ("kernel_bench", kernel_bench),
     ("pod_serving", pod_serving),
     ("pod_straggler", pod_straggler),
+    ("region_routing", region_routing),
     ("roofline", roofline),
     ("serve_decode", serve_decode),
 )

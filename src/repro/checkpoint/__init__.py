@@ -1,5 +1,5 @@
-from .store import (AsyncCheckpointer, latest_step, load_checkpoint,
-                    save_checkpoint)
+from .store import (AsyncCheckpointer, compress, decompress, default_codec,
+                    latest_step, load_checkpoint, save_checkpoint)
 
-__all__ = ["AsyncCheckpointer", "latest_step", "load_checkpoint",
-           "save_checkpoint"]
+__all__ = ["AsyncCheckpointer", "compress", "decompress", "default_codec",
+           "latest_step", "load_checkpoint", "save_checkpoint"]

@@ -41,22 +41,41 @@ _CODEC_EXT = {"zstd": "zst", "zlib": "zz"}
 _DEFAULT_CODEC = "zstd" if zstd is not None else "zlib"
 
 
-def _compress(data: bytes, codec: str) -> bytes:
-    if codec == "zstd":
-        return zstd.ZstdCompressor(level=3).compress(data)
-    return zlib.compress(data, 6)
+def default_codec() -> str:
+    """The best codec this build can write: zstd when the optional
+    ``zstandard`` package is present, stdlib zlib otherwise.  Shared by
+    checkpoints and the session wire format (:mod:`repro.region.wire`), so
+    both payloads degrade to the same always-importable fallback."""
+    return _DEFAULT_CODEC
 
 
-def _decompress(data: bytes, codec: str) -> bytes:
+def compress(data: bytes, codec: str) -> bytes:
     if codec == "zstd":
         if zstd is None:
             raise RuntimeError(
-                "checkpoint was written with zstd but the 'zstandard' "
+                "zstd compression requested but the 'zstandard' package "
+                "is not installed")
+        return zstd.ZstdCompressor(level=3).compress(data)
+    if codec != "zlib":
+        raise ValueError(f"unknown codec {codec!r}")
+    return zlib.compress(data, 6)
+
+
+def decompress(data: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstd is None:
+            raise RuntimeError(
+                "payload was written with zstd but the 'zstandard' "
                 "package is not installed")
         return zstd.ZstdDecompressor().decompress(data)
     if codec != "zlib":
-        raise ValueError(f"unknown checkpoint codec {codec!r}")
+        raise ValueError(f"unknown codec {codec!r}")
     return zlib.decompress(data)
+
+
+# back-compat module-private aliases (pre-region-tier internal names)
+_compress = compress
+_decompress = decompress
 
 
 def _leaf_paths(tree):

@@ -4,9 +4,11 @@ with pluggable cost models and search policies.
 The paper contributes a single idea at a single scale: an online latency
 manifest per task type, EMA-updated by the observing leader (§3.2), and
 searched under an objective to place work (§3.3).  This repo applies that
-idea at three scales — CPU cores (:class:`repro.core.ptt.PTT`), device
-groups (:class:`repro.distributed.elastic.PodPTT`), and serving replicas
-(:class:`repro.router.FleetPTT`) — and this module is the one
+idea at four scales — CPU cores (:class:`repro.core.ptt.PTT`), device
+groups (:class:`repro.distributed.elastic.PodPTT`), serving replicas
+(:class:`repro.router.FleetPTT`), and whole fleets across WAN regions
+(:class:`repro.region.RegionRouter`, whose :class:`WanCost` link table is
+a TraceTable with *link-keyed* axes) — and this module is the one
 implementation all of them instantiate.  Nothing outside this file merges
 an EMA or argmins a table.
 
@@ -55,6 +57,7 @@ widths), kept here so the EMA/argmin logic has exactly one home.
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import Mapping
 from typing import Callable, Iterable, Sequence
 
 import numpy as np
@@ -128,18 +131,28 @@ class SearchContext:
     """Everything a cost model may consult besides the table value.
 
     ``metric``: which metric axis the search reads (index or name).
-    ``backlog``: per-item queue depths (``backlog[item]``), or None.
+    ``backlog``: per-item queue depths (``backlog[item]``), or None.  An
+    entry may be a plain count *or* a ``{req_class: units}`` mapping —
+    a class-resolved backlog lets :class:`QueueAware` price each class's
+    queued units at its own learned service rate.
     ``tokens``: request size — scales per-token rows back to absolute
     predictions and sizes KV-transfer estimates.
     ``current``: the sticky home / migration source, or None.
-    ``service``: per-item EMA'd *per-request service time* lookup
-    (seconds/request; 0.0 = untrained), or None.
+    ``service``: per-item EMA'd *per-unit service time* lookup
+    (seconds; 0.0 = untrained), or None.  Called as ``service(item)`` for
+    the pooled rate; a caller supplying class-resolved backlogs must supply
+    a callable that also accepts ``service(item, req_class)``.
+    ``origin``: where the request's bytes currently live (ingress region /
+    session home) — what :class:`WanCost` charges hops away from.  Unlike
+    ``current`` it carries no sticky/migration semantics: a fresh request
+    has an origin but no current placement.
     """
     metric: int | str = 0
-    backlog: Sequence[int] | None = None
+    backlog: Sequence[int | Mapping] | None = None
     tokens: int = 1
     current: object = None
-    service: Callable[[object], float] | None = None
+    service: Callable[..., float] | None = None
+    origin: object = None
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +216,15 @@ class QueueAware(CostModel):
     ``value x tokens x (1 + backlog)`` (optimistic on untrained entries,
     preserving the bootstrap).
 
+    A backlog entry may also be a ``{req_class: units}`` mapping: each
+    class's queued units are then priced at that class's learned rate
+    (``ctx.service(item, req_class)`` — the per-class split of the ROADMAP's
+    service-rate lever).  One pooled rate mispredicts a mixed queue — a
+    backlog of short interactive prefills drains far faster than the same
+    unit count of decode-heavy turns — so the per-class sum tracks the true
+    seconds of work ahead.  Classes whose row (and pooled fallback) are
+    untrained degrade per-class to the classic count inflation.
+
     ``value_per_token=False`` treats the table value as an absolute
     per-operation latency (e.g. a TPOT decode-step row) instead of a
     per-token rate: ``ctx.tokens`` then sizes only composed terms like
@@ -219,9 +241,21 @@ class QueueAware(CostModel):
 
     def cost(self, value, cand, ctx):
         b = ctx.backlog[cand.item] if ctx.backlog is not None else 0
+        t = ctx.tokens if self.value_per_token else 1
+        if isinstance(b, Mapping):
+            if ctx.service is None:
+                return self.predict(value, t, sum(b.values()), 0.0)
+            own = value * max(t, 1)
+            wait = 0.0
+            for c, units in b.items():
+                rate = ctx.service(cand.item, c)
+                if rate > 0.0:
+                    wait += units * rate
+                else:             # untrained class AND pooled fallback:
+                    wait += own * units      # classic count inflation
+            return own + wait
         s = ctx.service(cand.item) if ctx.service is not None else 0.0
-        return self.predict(value, ctx.tokens if self.value_per_token else 1,
-                            b, s)
+        return self.predict(value, t, b, s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,6 +272,44 @@ class MigrationCost(CostModel):
         if ctx.current is None or cand.item == ctx.current:
             return 0.0
         return self.fixed + self.per_token * max(ctx.tokens, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class WanCost(CostModel):
+    """WAN-hop charge for placing work away from where its bytes live:
+    the learned link RTT (an EMA :class:`TraceTable` keyed ``(src, dst)``
+    — the same §3.2 store, its key axes naming *links* instead of cores)
+    plus a per-byte egress charge sized by ``ctx.tokens x bytes_per_token``.
+
+    The home side of the hop is ``ctx.origin`` (ingress region / session
+    home), falling back to ``ctx.current`` when unset — so composed into a
+    sticky search it charges the same hop a :class:`MigrationCost` charges,
+    while a fresh request (origin set, no current placement) pays the hop
+    without inheriting sticky semantics.  Staying home is free; an
+    untrained link row reads 0.0 and charges only egress, preserving the
+    bootstrap (the first hops over a link are cheap, get taken, and train
+    its RTT row).  Candidate items must index the link table's key axes
+    directly (the region tier uses fleet indices)."""
+    links: TraceTable
+    egress_per_byte: float = 0.0     # "seconds" of cost per byte shipped
+                                     # (a $-to-latency exchange rate)
+    bytes_per_token: float = 0.0     # KV/prompt bytes moved per token
+    metric: int | str = 0
+
+    def rtt(self, src, dst) -> float:
+        """Learned round-trip time of the ``src -> dst`` link (0.0 for the
+        loopback link and for untrained rows)."""
+        if src == dst:
+            return 0.0
+        return self.links.value((src, dst), self.metric)
+
+    def cost(self, value, cand, ctx):
+        home = ctx.origin if ctx.origin is not None else ctx.current
+        if home is None or cand.item == home:
+            return 0.0
+        return (self.rtt(home, cand.item)
+                + self.egress_per_byte * self.bytes_per_token
+                * max(ctx.tokens, 0))
 
 
 # ---------------------------------------------------------------------------

@@ -50,6 +50,15 @@ def extract_session(cache: dict, slot: int, pos: int, logical_axes: dict,
     return out
 
 
+def session_nbytes(session: dict) -> int:
+    """Raw (pre-compression) bytes of a session's cache slice — what a WAN
+    transfer actually moves.  Sized from the materialized host arrays, so
+    it reflects the trimmed live length, not the engine's full ``max_seq``
+    allocation.  The region tier divides by the session's position to
+    calibrate :class:`~repro.core.tracetable.WanCost.bytes_per_token`."""
+    return int(sum(np.asarray(v).nbytes for v in session.values()))
+
+
 def insert_session(cache: dict, slot: int, session: dict,
                    logical_axes: dict) -> dict:
     """Write a session (or a fresh single-request prefill cache — same

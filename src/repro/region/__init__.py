@@ -1,0 +1,28 @@
+"""Cross-region serving fabric: the Performance Trace Table's fourth scale.
+
+Cores -> device groups -> serving replicas -> **fleets across WAN
+regions**.  A :class:`RegionRouter` places requests over N
+:class:`~repro.router.FleetGateway` fleets with the same
+TraceTable/CostModel/SearchPolicy machinery every other scale uses, plus
+a :class:`~repro.core.tracetable.WanCost` term (learned per-link RTT EMA
+rows + per-byte egress) that makes leaving the ingress region pay for the
+hop.  Underneath it, the remote session transport: a versioned byte wire
+format for live sessions (:mod:`repro.region.wire`) riding a pluggable
+:class:`Transport` (:mod:`repro.region.transport`), which is how a
+:class:`RegionGateway` drains a browned-out fleet's live sessions
+cross-region without in-process object handoff.
+"""
+
+from ..core.tracetable import WanCost
+from .gateway import RegionGateway
+from .router import RegionDecision, RegionRouter
+from .transport import LoopbackTransport, Transport
+from .wire import (WIRE_MAGIC, WIRE_VERSION, WireFormatError,
+                   decode_session, encode_session, wire_header)
+
+__all__ = [
+    "RegionDecision", "RegionGateway", "RegionRouter",
+    "LoopbackTransport", "Transport", "WanCost",
+    "WIRE_MAGIC", "WIRE_VERSION", "WireFormatError",
+    "decode_session", "encode_session", "wire_header",
+]

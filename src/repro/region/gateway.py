@@ -1,0 +1,255 @@
+"""RegionGateway — front N :class:`~repro.router.FleetGateway` fleets with
+a :class:`RegionRouter` and a byte :class:`~repro.region.transport.Transport`.
+
+The region tier's glue, mirroring what the fleet gateway does one level
+down:
+
+* ``submit`` routes each request to a fleet (sticky affinity keeps chatty
+  decodes home unless the WAN-adjusted cost says otherwise) and hands it
+  to that fleet's own admission;
+* ``pump`` drains **browned-out** fleets — a region-wide incident, the
+  whole-fleet analogue of a replica quarantine — then pumps every fleet
+  and harvests region-level TTFT/service/TPOT observations into the
+  region tables;
+* a drain never hands live objects across the fleet boundary: each
+  session is frozen (`FleetGateway.export_for_region`), encoded
+  (:func:`~repro.region.wire.encode_session`), shipped as bytes, decoded,
+  and adopted (`FleetGateway.adopt_session`) — so replacing the loopback
+  transport with a socket changes nothing here;
+* before any export, :meth:`RegionRouter.drain_rank` asks whether the
+  move *pays*: the browned-out source competes as the free stay-home
+  candidate against every healthy fleet's predicted TPOT plus RTT,
+  egress, and re-ingest charges.  A stay-home win skips the export
+  entirely (the session finishes slowly where its cache already is);
+* every shipped payload's delivery time trains the link's RTT EMA row —
+  the WAN cost model learns from the drains it prices.
+
+Cross-boundary identity is the ``rid``: a decoded session carries a *new*
+:class:`~repro.serve.engine.Request` object, so the gateway keeps the
+live handle per rid (``request(rid)``) and the submitter's original
+object stays frozen at its export-time state after a WAN migration.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import numpy as np
+
+from ..models.sessions import session_nbytes
+from ..router.gateway import FleetGateway
+from ..serve.engine import Request, Session
+from .router import RegionDecision, RegionRouter
+from .transport import LoopbackTransport, Transport
+from .wire import decode_session, encode_session
+
+
+class RegionGateway:
+    HANDLE_CAP = 100_000     # finished request handles retained (oldest
+                             # harvested entries evicted first)
+
+    def __init__(self, fleets: Sequence[FleetGateway],
+                 router: RegionRouter | None = None,
+                 transport: Transport | None = None,
+                 clock=time.perf_counter):
+        if not fleets:
+            raise ValueError("need at least one fleet")
+        self.fleets = list(fleets)
+        self.router = router or RegionRouter(len(fleets))
+        self.transport = transport or LoopbackTransport()
+        self.clock = clock
+        self._handles: dict[int, Request] = {}   # rid -> live handle
+        self._meta: dict[int, dict] = {}         # rid -> harvest state
+        self._unharvested: set[int] = set()      # rids awaiting a first
+                                                 # token (pump scans ONLY
+                                                 # these, not all history)
+        self._shed_seen = [0] * len(self.fleets)   # per-fleet shed_total
+                                                   # consumed so far
+        self._wan_ships = 0
+        self._wan_bytes = 0                      # wire bytes on links
+        self._raw_bytes = 0                      # pre-compression cache bytes
+        self._stay_home = 0                      # drain exports skipped
+
+    # -- ingress -----------------------------------------------------------
+    def class_backlogs(self) -> list[dict[int, int]]:
+        """Per-fleet class-resolved backlog — the region search prices
+        each class's queued units at its learned per-class rate."""
+        return [gw.class_backlog() for gw in self.fleets]
+
+    def submit(self, req: Request, *, origin: int = 0,
+               affinity: int | None = None) -> RegionDecision:
+        d = self.router.route(len(req.prompt), req.max_new, origin=origin,
+                              affinity=affinity,
+                              backlog=self.class_backlogs())
+        if len(self._meta) >= self.HANDLE_CAP:      # evict oldest finished
+            for rid in list(self._meta):
+                if len(self._meta) < self.HANDLE_CAP:
+                    break
+                if rid not in self._unharvested:
+                    del self._meta[rid]
+                    del self._handles[rid]
+        self._handles[req.rid] = req
+        self._meta[req.rid] = {"fleet": d.fleet,
+                               "req_class": int(d.req_class),
+                               "t_arrival": self.clock(), "ttft": None}
+        self._unharvested.add(req.rid)
+        self.fleets[d.fleet].submit(req)
+        return d
+
+    def request(self, rid: int) -> Request:
+        """The live handle for ``rid`` — after a WAN migration this is the
+        decoded copy accumulating tokens, not the submitter's original.
+        Finished handles are retained up to ``HANDLE_CAP`` (oldest evicted
+        first); an evicted rid raises KeyError."""
+        return self._handles[rid]
+
+    # -- brownout ----------------------------------------------------------
+    def brownout(self, fleet: int) -> None:
+        """Take a whole fleet out of rotation; the next ``pump`` drains
+        its live sessions cross-region through the wire format."""
+        self.router.brownout(fleet)
+
+    def restore(self, fleet: int) -> None:
+        self.router.restore(fleet)
+
+    def _ship_session(self, sess: Session, src: int, dst: int) -> None:
+        self._raw_bytes += session_nbytes(sess.cache)
+        data = encode_session(sess)
+        delivered = self.transport.ship(data, src, dst)
+        rtt = self.transport.last_rtt_s
+        if rtt > 0.0:
+            self.router.record_rtt(src, dst, rtt)
+        sess = decode_session(delivered)         # the far side's object
+        try:
+            self.fleets[dst].adopt_session(sess)
+        except ValueError:
+            # the destination refused after all (raced slot/cache churn
+            # between the can_hold pre-check and the import): the export
+            # is sunk but the session must not be lost — park it back on
+            # the source fleet, where it drains slowly
+            self.fleets[src].adopt_session(sess)
+            dst = src
+        self._handles[sess.req.rid] = sess.req
+        if sess.req.rid in self._meta:
+            self._meta[sess.req.rid]["fleet"] = dst
+        self._wan_ships += 1
+        self._wan_bytes += len(data)
+
+    def _drain_browned_out(self) -> int:
+        """Empty every browned-out fleet: re-route unstarted requests,
+        ship parked session imports, and migrate live sessions whose WAN
+        move pays (stay-home wins skip the export).  Returns sessions
+        shipped this pump."""
+        shipped = 0
+        for src in sorted(self.router.browned_out):
+            gw = self.fleets[src]
+            if not self.router.healthy():
+                break                # nowhere to go: degrade gracefully
+            for req in gw.drain_unstarted():
+                d = self.router.route(len(req.prompt), req.max_new,
+                                      origin=src,
+                                      backlog=self.class_backlogs())
+                if req.rid in self._meta:
+                    self._meta[req.rid]["fleet"] = d.fleet
+                self.fleets[d.fleet].submit(req)
+            for sess in gw.drain_parked_sessions():
+                # already host-numpy: the export is sunk, ship to the best
+                # healthy fleet that fits (back onto the source if none)
+                remaining = max(sess.req.max_new - len(sess.req.out_tokens),
+                                0)
+                order = self.router.drain_rank(
+                    src, sess.pos, backlog=self.class_backlogs())
+                dest = next((f for f in order if f != src
+                             and self.fleets[f].can_hold(sess.pos,
+                                                         remaining)), None)
+                if dest is None:
+                    gw.adopt_session(sess)
+                    continue
+                self._ship_session(sess, src, dest)
+                shipped += 1
+            for rid, pos, remaining in gw.live_sessions():
+                order = self.router.drain_rank(
+                    src, pos, backlog=self.class_backlogs())
+                viable = [f for f in order
+                          if f == src or self.fleets[f].can_hold(pos,
+                                                                 remaining)]
+                if not viable or viable[0] == src:
+                    # stay-home win (or nowhere fits): the WAN move does
+                    # not pay — no export, no device->host round trip
+                    self._stay_home += 1
+                    continue
+                self._ship_session(gw.export_for_region(rid), src,
+                                   viable[0])
+                shipped += 1
+        return shipped
+
+    # -- pump --------------------------------------------------------------
+    def pump(self) -> int:
+        """One region iteration: drain browned-out fleets, pump every
+        fleet, harvest region-level observations.  Returns sequences
+        still active region-wide."""
+        self._drain_browned_out()
+        active = 0
+        for f, gw in enumerate(self.fleets):
+            a = gw.pump()
+            active += a
+            if a > 0:
+                # region TPOT row: the fleet's engines' per-token decode
+                # latency (the drain/sticky searches read this)
+                lat = [e.last_step_latency for e in gw.engines
+                       if e.last_step_latency > 0.0]
+                if lat:
+                    self.router.record_tpot(f, float(np.mean(lat)))
+        for f, gw in enumerate(self.fleets):
+            # requests the fleet shed will never produce a first token:
+            # release them from the harvest scan (and so from the
+            # eviction exemption) — only the NEW sheds since last pump
+            # are walked, via the fleet's monotone shed counter
+            new = gw.shed_total - self._shed_seen[f]
+            if new:
+                self._shed_seen[f] = gw.shed_total
+                for req in list(gw.shed)[-new:]:
+                    self._unharvested.discard(req.rid)
+        for rid in list(self._unharvested):
+            mt = self._meta[rid]
+            h = self._handles[rid]
+            if not h.out_tokens:
+                continue
+            self._unharvested.discard(rid)
+            tok = h.t_first if h.t_first is not None else self.clock()
+            mt["ttft"] = tok - mt["t_arrival"]
+            # like the fleet gateway: the learning sample is the service
+            # span (prefill start -> first token), not the client span —
+            # queue wait is the backlog term's job, WAN time the links'
+            t0 = h.t_admit if h.t_admit is not None else mt["t_arrival"]
+            self.router.record_ttft(mt["fleet"], mt["req_class"],
+                                    tok - t0, prompt_len=len(h.prompt))
+            # units=1: class_backlogs() counts requests per class, so the
+            # learned rate must be seconds per request (the per-class
+            # split is what absorbs the size differences)
+            self.router.record_service(mt["fleet"], tok - t0,
+                                       req_class=mt["req_class"])
+        return active
+
+    def run_until_drained(self, max_steps: int = 10000) -> None:
+        for _ in range(max_steps):
+            if (self.pump() == 0
+                    and not any(gw.held for gw in self.fleets)
+                    and not any(e.pending() for gw in self.fleets
+                                for e in gw.engines)):
+                return
+
+    # -- results -----------------------------------------------------------
+    def ttfts(self) -> dict[int, float]:
+        return {rid: m["ttft"] for rid, m in self._meta.items()
+                if m["ttft"] is not None}
+
+    def stats(self) -> dict:
+        return {**self.router.stats(),
+                "wan_ships": self._wan_ships,
+                "wan_bytes": self._wan_bytes,
+                "raw_session_bytes": self._raw_bytes,
+                "stay_home_skips": self._stay_home,
+                "fleet_served": [gw.stats()["served"]
+                                 for gw in self.fleets]}

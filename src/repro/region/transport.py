@@ -1,0 +1,66 @@
+"""Byte transport between fleets.
+
+The region tier never hands live Python objects across a fleet boundary:
+a session leaves as :func:`~repro.region.wire.encode_session` bytes, rides
+a :class:`Transport`, and is rebuilt by
+:func:`~repro.region.wire.decode_session` on the far side.  Because the
+boundary is bytes, swapping the in-process :class:`LoopbackTransport` for
+a socket/RPC transport changes nothing above this line — the wire format
+is the contract.
+
+:class:`LoopbackTransport` is the reference implementation: it delivers
+the payload unchanged within the process, keeps per-link byte/ship
+counters (the egress a :class:`~repro.core.tracetable.WanCost` charges
+for), and can simulate per-link delivery latency so tests and benchmarks
+can train the region router's RTT rows deterministically.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Callable
+
+
+class Transport:
+    """Moves one encoded payload from fleet ``src`` to fleet ``dst``.
+
+    ``ship`` returns the bytes as delivered at the destination (a real
+    transport returns what arrived; a simulating one may return the input
+    unchanged) and ``last_rtt_s`` the delivery time of the most recent
+    ship — the sample the region router trains its per-link RTT EMA rows
+    with."""
+
+    last_rtt_s: float = 0.0
+
+    def ship(self, data: bytes, src: int, dst: int) -> bytes:
+        raise NotImplementedError
+
+
+class LoopbackTransport(Transport):
+    """In-process delivery with optional simulated link latency.
+
+    ``link_rtt(src, dst) -> seconds`` (when given) stamps ``last_rtt_s``
+    per ship without sleeping — deterministic RTT training for tests and
+    benchmarks.  Without it, ``last_rtt_s`` is 0.0 (an in-process hop is
+    free; real socket transports report measured wall time)."""
+
+    def __init__(self,
+                 link_rtt: Callable[[int, int], float] | None = None):
+        self.link_rtt = link_rtt
+        self.bytes_by_link: dict[tuple[int, int], int] = defaultdict(int)
+        self.ships_by_link: dict[tuple[int, int], int] = defaultdict(int)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_link.values())
+
+    @property
+    def total_ships(self) -> int:
+        return sum(self.ships_by_link.values())
+
+    def ship(self, data: bytes, src: int, dst: int) -> bytes:
+        self.bytes_by_link[(src, dst)] += len(data)
+        self.ships_by_link[(src, dst)] += 1
+        self.last_rtt_s = (float(self.link_rtt(src, dst))
+                           if self.link_rtt is not None else 0.0)
+        return data

@@ -1,0 +1,156 @@
+"""Versioned wire format for live serving sessions.
+
+A :class:`~repro.serve.engine.Session` is already transport-shaped — the
+request, its decode position, the next input token, and a host-numpy cache
+slice — but until now it only moved between engines as an in-process
+object.  This module gives it a byte encoding so it can cross a process or
+WAN boundary:
+
+``RSES | version | codec | crc32(payload) | compressed msgpack payload``
+
+* the 4-byte magic and one-byte **format version** make foreign or
+  future-format payloads fail loudly (``WireFormatError``), never decode
+  into garbage;
+* the one-byte **codec id** records how the payload was compressed — the
+  checkpoint codec path (zstd when the optional ``zstandard`` package is
+  present, stdlib zlib otherwise), so a zlib-only build reads any payload
+  it can and reports the one it can't;
+* the **crc32** of the compressed payload catches truncation and bit rot
+  before anything is deserialized;
+* the payload itself is msgpack (never pickle — a wire format that
+  executes its sender's bytecode is not a wire format), with every numpy
+  leaf encoded as ``{dtype, shape, data}`` exactly like checkpoint shards.
+
+``t_first``/``t_admit`` are wall-clock ``perf_counter`` stamps: meaningful
+on the host that wrote them (loopback transport), opaque across hosts —
+receivers must not compare them against their own clock.
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+
+import msgpack
+import numpy as np
+
+from ..checkpoint.store import compress, decompress, default_codec
+from ..serve.engine import Request, Session
+
+WIRE_MAGIC = b"RSES"
+WIRE_VERSION = 1
+_CODEC_IDS = {"zlib": 0, "zstd": 1}
+_CODEC_NAMES = {v: k for k, v in _CODEC_IDS.items()}
+# magic(4) + version(1) + codec(1) + crc32(4)
+_HEADER = struct.Struct(">4sBBI")
+
+
+class WireFormatError(ValueError):
+    """The payload is not a decodable session: wrong magic, unknown
+    version or codec, checksum mismatch, or corrupt body."""
+
+
+def _pack_array(a: np.ndarray) -> dict:
+    a = np.asarray(a)
+    return {"dtype": str(a.dtype), "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_array(d: dict) -> np.ndarray:
+    # .copy(): frombuffer views are read-only and pin the payload bytes
+    return np.frombuffer(d["data"], dtype=d["dtype"]).reshape(
+        d["shape"]).copy()
+
+
+def encode_session(sess: Session, codec: str | None = None) -> bytes:
+    """Serialize a session for transport.  ``codec`` defaults to the best
+    one this build can write (the checkpoint codec path)."""
+    codec = codec if codec is not None else default_codec()
+    if codec not in _CODEC_IDS:
+        raise WireFormatError(f"unknown wire codec {codec!r}")
+    req = sess.req
+    payload = {
+        "req": {
+            "rid": int(req.rid),
+            "prompt": _pack_array(req.prompt),
+            "max_new": int(req.max_new),
+            "tenant": req.tenant,
+            "extras": {k: _pack_array(v) for k, v in req.extras.items()},
+            "out_tokens": [int(t) for t in req.out_tokens],
+            "done": bool(req.done),
+            "t_first": req.t_first,
+            "t_admit": req.t_admit,
+        },
+        "pos": int(sess.pos),
+        "cur_token": int(sess.cur_token),
+        "cache": {k: _pack_array(v) for k, v in sess.cache.items()},
+    }
+    body = compress(msgpack.packb(payload, use_bin_type=True), codec)
+    header = _HEADER.pack(WIRE_MAGIC, WIRE_VERSION, _CODEC_IDS[codec],
+                          zlib.crc32(body) & 0xFFFFFFFF)
+    return header + body
+
+
+def wire_header(data: bytes) -> dict:
+    """Parse and validate just the header: ``{version, codec, nbytes}``.
+    Cheap enough for routing/stats layers that never decode the body."""
+    if len(data) < _HEADER.size:
+        raise WireFormatError(
+            f"payload too short for a session wire header "
+            f"({len(data)} < {_HEADER.size} bytes)")
+    magic, version, codec_id, crc = _HEADER.unpack_from(data)
+    if magic != WIRE_MAGIC:
+        raise WireFormatError(
+            f"bad magic {magic!r}: not a session wire payload")
+    if version != WIRE_VERSION:
+        # strict equality: the CRC covers only the body, so a corrupted
+        # version byte (e.g. 1 -> 0) must fail HERE, not be decoded under
+        # the wrong layout (grow an explicit compat map when v2 exists)
+        raise WireFormatError(
+            f"unsupported session wire version {version} "
+            f"(this build reads {WIRE_VERSION})")
+    codec = _CODEC_NAMES.get(codec_id)
+    if codec is None:
+        raise WireFormatError(f"unknown wire codec id {codec_id}")
+    return {"version": version, "codec": codec, "crc": crc,
+            "nbytes": len(data)}
+
+
+def decode_session(data: bytes) -> Session:
+    """Reconstruct a session from :func:`encode_session` bytes.
+
+    Every failure mode — foreign bytes, a future format version, a codec
+    this build can't read, truncation, corruption — raises
+    :class:`WireFormatError` with the specific cause; nothing is ever
+    deserialized from a payload whose checksum doesn't match.  The decoded
+    session carries a *new* :class:`Request` object (the sender's handle
+    stays frozen at export — cross-boundary identity is the ``rid``)."""
+    h = wire_header(data)
+    body = data[_HEADER.size:]
+    if (zlib.crc32(body) & 0xFFFFFFFF) != h["crc"]:
+        raise WireFormatError("session payload checksum mismatch "
+                              "(truncated or corrupt)")
+    try:
+        raw = decompress(body, h["codec"])
+        payload = msgpack.unpackb(raw, raw=False, strict_map_key=False)
+        r = payload["req"]
+        req = Request(rid=r["rid"], prompt=_unpack_array(r["prompt"]),
+                      max_new=r["max_new"], tenant=r["tenant"],
+                      extras={k: _unpack_array(v)
+                              for k, v in r["extras"].items()},
+                      out_tokens=list(r["out_tokens"]), done=r["done"],
+                      t_first=r["t_first"], t_admit=r["t_admit"])
+        return Session(req=req, pos=payload["pos"],
+                       cur_token=payload["cur_token"],
+                       cache={k: _unpack_array(v)
+                              for k, v in payload["cache"].items()})
+    except WireFormatError:
+        raise
+    except RuntimeError as e:
+        # codec named in the header but not importable on this build
+        # (zstd payload, zlib-only receiver): still a WireFormatError —
+        # the caller's reject-and-requeue path must catch it
+        raise WireFormatError(str(e)) from e
+    except Exception as e:      # zlib/msgpack/shape errors: corrupt body
+        raise WireFormatError(
+            f"session payload failed to decode ({e})") from e

@@ -7,7 +7,7 @@ Cost models and search policies come from :mod:`repro.core.tracetable`
 """
 
 from ..core.tracetable import (CostModel, Latency, MigrationCost, Occupancy,
-                               QueueAware, TraceTable)
+                               QueueAware, TraceTable, WanCost)
 from .admission import Admission, AdmissionController, SLOPolicy
 from .fleet_ptt import FleetPTT
 from .gateway import FleetGateway
@@ -20,5 +20,5 @@ __all__ = [
     "InterferenceConfig", "InterferenceDetector",
     "FleetRouter", "RouteDecision",
     "CostModel", "Latency", "MigrationCost", "Occupancy", "QueueAware",
-    "TraceTable",
+    "TraceTable", "WanCost",
 ]

@@ -27,6 +27,7 @@ Latency for sticky) exactly when no service rates have been recorded.
 
 from __future__ import annotations
 
+from collections.abc import Mapping
 from typing import Iterable, Sequence
 
 import numpy as np
@@ -52,10 +53,14 @@ class FleetPTT(EMASearchMixin):
         self.num_classes = num_classes
         self._t = TraceTable((num_classes, num_replicas),
                              metrics=("ttft", "tpot"))
-        # class-agnostic per-replica service rate: seconds per request,
-        # whatever the mix — the queue ahead of a new arrival is mixed, so
-        # the wait estimate must be too
+        # per-replica service rates: a pooled row (seconds per unit,
+        # whatever the mix — what a caller with only queue *counts* can
+        # use) plus a per-class split (short prefills drain a queue far
+        # faster than decode-heavy turns; a caller passing class-resolved
+        # backlogs gets each class priced at its own rate)
         self._svc = TraceTable((num_replicas,), metrics=("service",))
+        self._svc_class = TraceTable((num_classes, num_replicas),
+                                     metrics=("service",))
 
     # -- views -------------------------------------------------------------
     @property
@@ -72,9 +77,17 @@ class FleetPTT(EMASearchMixin):
                 metric: int = TTFT) -> bool:
         return self._t.trained((req_class, replica), metric)
 
-    def service_time(self, replica: int) -> float:
-        """EMA'd per-request wall service time on ``replica`` (seconds;
-        0.0 = untrained)."""
+    def service_time(self, replica: int,
+                     req_class: int | None = None) -> float:
+        """EMA'd per-unit wall service time on ``replica`` (seconds; 0.0 =
+        untrained).  With ``req_class``, the class-split rate — falling
+        back to the pooled row while the class row is untrained, so a
+        class-resolved caller degrades to exactly the pooled prediction
+        until per-class samples arrive."""
+        if req_class is not None:
+            v = self._svc_class.value((int(req_class), replica))
+            if v > 0.0:
+                return v
         return self._svc.value((replica,))
 
     # -- update ------------------------------------------------------------
@@ -83,7 +96,7 @@ class FleetPTT(EMASearchMixin):
         self._t.update((req_class, replica), sample, metric)
 
     def record_service(self, replica: int, seconds: float, *,
-                       units: int = 1) -> None:
+                       units: int = 1, req_class: int | None = None) -> None:
         """One completed request's wall service time on ``replica``.
 
         ``units`` must match the unit the caller's ``backlog`` is counted
@@ -92,8 +105,15 @@ class FleetPTT(EMASearchMixin):
         knows every queued request's length — far sharper under mixed
         sizes) records per-token times (units=prompt_len).  The learned
         rate is seconds *per backlog unit* either way, so the QueueAware
-        wait term ``backlog x rate`` stays dimensionally exact."""
-        self._svc.update((replica,), seconds / max(units, 1))
+        wait term ``backlog x rate`` stays dimensionally exact.
+
+        ``req_class`` additionally trains that class's split rate (the
+        pooled row always trains), which class-resolved backlogs read via
+        ``service_time(replica, req_class)``."""
+        rate = seconds / max(units, 1)
+        self._svc.update((replica,), rate)
+        if req_class is not None:
+            self._svc_class.update((int(req_class), replica), rate)
 
     def decay_service(self, replica: int, target: float) -> None:
         """EMA the stored service rate toward ``target`` without a real
@@ -108,36 +128,47 @@ class FleetPTT(EMASearchMixin):
 
     # -- searches ----------------------------------------------------------
     def _candidates(self, req_class: int, healthy: Iterable[int] | None,
-                    backlog: Sequence[int] | None) -> list[Candidate]:
+                    backlog: Sequence[int | Mapping] | None
+                    ) -> list[Candidate]:
         items = (range(self.num_replicas) if healthy is None
                  else tuple(healthy))
-        return [Candidate(key=(req_class, r), item=r,
-                          tie=(backlog[r] if backlog is not None else 0))
+        def tie(r: int) -> float:
+            if backlog is None:
+                return 0
+            b = backlog[r]
+            return sum(b.values()) if isinstance(b, Mapping) else b
+        return [Candidate(key=(req_class, r), item=r, tie=tie(r))
                 for r in items]
 
-    def _context(self, metric: int, backlog: Sequence[int] | None,
-                 tokens: int, current: int | None = None) -> SearchContext:
+    def _context(self, metric: int, backlog: Sequence[int | Mapping] | None,
+                 tokens: int, current: int | None = None,
+                 origin: int | None = None) -> SearchContext:
         return SearchContext(metric=metric, backlog=backlog, tokens=tokens,
-                             current=current, service=self.service_time)
+                             current=current, service=self.service_time,
+                             origin=origin)
 
     def global_search(self, req_class: int, metric: int = TTFT,
                       healthy: Iterable[int] | None = None,
-                      backlog: Sequence[int] | None = None, *,
-                      tokens: int = 1,
+                      backlog: Sequence[int | Mapping] | None = None, *,
+                      tokens: int = 1, origin: int | None = None,
                       cost: CostModel | None = None) -> int:
         """Min-predicted-cost replica over the healthy set (critical
         traffic; the fleet analogue of the paper's global PTT search).
         Default cost: :class:`QueueAware` — ties (and the all-untrained
-        bootstrap) break toward the shortest queue."""
+        bootstrap) break toward the shortest queue.  ``origin`` marks
+        where the request's bytes live so a composed
+        :class:`~repro.core.tracetable.WanCost` can charge cross-link
+        placement (the region tier's hop charge)."""
         return self._t.search(
             self._candidates(req_class, healthy, backlog),
             cost if cost is not None else QueueAware(), GlobalSearch(),
-            self._context(metric, backlog, tokens))
+            self._context(metric, backlog, tokens, origin=origin))
 
     def ranked_search(self, req_class: int, metric: int = TTFT,
                       healthy: Iterable[int] | None = None,
-                      backlog: Sequence[int] | None = None, *,
+                      backlog: Sequence[int | Mapping] | None = None, *,
                       tokens: int = 1, current: int | None = None,
+                      origin: int | None = None,
                       cost: CostModel | None = None) -> list[int]:
         """All candidates in ascending predicted-cost order (same cost as
         ``global_search``) — for callers that need a fallback chain, e.g.
@@ -148,12 +179,14 @@ class FleetPTT(EMASearchMixin):
         return self._t.search(
             self._candidates(req_class, healthy, backlog),
             cost if cost is not None else QueueAware(), RankedSearch(),
-            self._context(metric, backlog, tokens, current=current))
+            self._context(metric, backlog, tokens, current=current,
+                          origin=origin))
 
     def sticky_search(self, req_class: int, replica: int, metric: int = TPOT,
                       healthy: Iterable[int] | None = None,
                       migrate_ratio: float = 2.0, *,
-                      backlog: Sequence[int] | None = None, tokens: int = 1,
+                      backlog: Sequence[int | Mapping] | None = None,
+                      tokens: int = 1,
                       cost: CostModel | None = None) -> int:
         """Stay on ``replica`` unless it is unhealthy or the best healthy
         replica beats it by more than ``migrate_ratio`` (non-critical
@@ -170,7 +203,7 @@ class FleetPTT(EMASearchMixin):
 
     # -- admission signal --------------------------------------------------
     def predict_ttft(self, req_class: int, replica: int,
-                     backlog: int = 0, *, tokens: int = 1,
+                     backlog: int | Mapping = 0, *, tokens: int = 1,
                      value_scale: float = 1.0) -> float:
         """Predicted TTFT if routed to ``replica`` with ``backlog`` requests
         already ahead of it — the :class:`QueueAware` formula: TTFT rows
@@ -182,7 +215,15 @@ class FleetPTT(EMASearchMixin):
         TTFT *row* term only (the router's quarantine overflow scales the
         healthy-era row by the live drift ratio; the wait term needs no
         scaling because the stored service rate decays during quarantine —
-        see :meth:`decay_service`)."""
+        see :meth:`decay_service`).  A ``{req_class: units}`` mapping
+        backlog prices each class's queued units at its own split rate
+        (pooled fallback per class) — the sharper wait estimate under
+        mixed short/long traffic."""
         est = self._t.value((req_class, replica), self.TTFT) * value_scale
+        if isinstance(backlog, Mapping):
+            return float(QueueAware().cost(
+                est, Candidate(key=(req_class, replica), item=replica),
+                SearchContext(metric=self.TTFT, backlog={replica: backlog},
+                              tokens=tokens, service=self.service_time)))
         return float(QueueAware.predict(est, tokens, backlog,
                                         self.service_time(replica)))

@@ -43,7 +43,7 @@ from collections import deque
 from typing import Sequence
 
 from ..core.tracetable import QueueAware
-from ..serve.engine import Request, ServeEngine
+from ..serve.engine import Request, ServeEngine, Session
 from ..serve.scheduler import RequestClass, classify_request
 from .admission import Admission
 from .fleet_ptt import FleetPTT
@@ -84,6 +84,8 @@ class FleetGateway:
         # (request, affinity, requeue count, arrival time)
         self.held: deque[tuple[Request, int | None, int, float]] = deque()
         self.shed: deque[Request] = deque(maxlen=self.SHED_CAP)
+        self.shed_total = 0      # monotone (the deque caps/evicts): lets a
+                                 # region tier consume only NEW sheds per pump
         self._displaced_rids: set[int] = set()   # one displacement each
         # weighted fair shedding: each shed charges its tenant weight_of()
         # debt; victims come from the lowest-debt tenant first, so shed
@@ -100,6 +102,29 @@ class FleetGateway:
     # -- ingress -----------------------------------------------------------
     def backlog(self) -> list[int]:
         return [e.pending() + e.active_count() for e in self.engines]
+
+    def class_backlog(self) -> dict[int, int]:
+        """This fleet's queued+active composition by request class — the
+        class-resolved backlog a region tier prices per class (a queue of
+        short prefills drains far faster than the same count of
+        decode-heavy turns).  This is an O(queued+active) walk recomputed
+        per call; a deployment routing at high request rates should
+        maintain incremental counters instead (measured follow-up — at
+        this reference scale the walk never shows up in profiles)."""
+        counts: dict[int, int] = {}
+        def add(c: int) -> None:
+            counts[c] = counts.get(c, 0) + 1
+        for e in self.engines:
+            for req in e.queue:
+                add(int(classify_request(len(req.prompt), req.max_new)))
+            for _ in e.sessions_in:
+                add(int(RequestClass.DECODE))
+            for req in e.active:
+                if req is not None:
+                    add(int(classify_request(len(req.prompt), req.max_new)))
+        for req, _, _, _ in self.held:
+            add(int(classify_request(len(req.prompt), req.max_new)))
+        return counts
 
     def submit(self, req: Request,
                affinity: int | None = None) -> RouteDecision:
@@ -136,6 +161,7 @@ class FleetGateway:
         self._tenant_debt[req.tenant] = (
             self._tenant_debt.get(req.tenant, 0.0) + w)
         self.shed.append(req)
+        self.shed_total += 1
 
     def _displace_lower_priority(self, req_class) -> bool:
         """If a held request has strictly lower class priority, shed *it*
@@ -374,6 +400,119 @@ class FleetGateway:
         self._migrations += moved
         return moved
 
+    # -- region-tier export hooks ------------------------------------------
+    # A RegionGateway draining a browned-out fleet pulls work out through
+    # these instead of reaching into engines: unstarted requests re-route
+    # as plain Requests, live sessions are enumerated (so the region tier
+    # can decide per session whether the WAN move pays before any export
+    # happens) and exported one by one for wire transport.
+
+    def _untrack(self, rid: int) -> None:
+        i = self._tracked_index(rid)
+        if i is not None:
+            t = self.tracked.pop(i)
+            self._per_replica[t.replica] -= 1    # never served here
+
+    def drain_unstarted(self) -> list[Request]:
+        """Remove every queued-but-unstarted request from this fleet —
+        engine queues and the gateway hold queue — for cross-fleet
+        re-routing (no cache state exists yet, so no wire format is
+        needed)."""
+        out: list[Request] = []
+        for e in self.engines:
+            for req in e.drain_queue():
+                if self._tracked_index(req.rid) is not None:
+                    # dispatched here but never served: its ADMIT count
+                    # moves to SHED — "this fleet gave it up" (the region
+                    # tier re-homes it through another fleet's admission)
+                    self._untrack(req.rid)
+                    self.router.admission.reclassify(
+                        classify_request(len(req.prompt), req.max_new),
+                        Admission.ADMIT, Admission.SHED)
+                out.append(req)
+        while self.held:
+            req, _, _, _ = self.held.popleft()
+            self.router.admission.reclassify(
+                classify_request(len(req.prompt), req.max_new),
+                Admission.QUEUE, Admission.SHED)
+            self._displaced_rids.discard(req.rid)
+            out.append(req)
+        return out
+
+    def drain_parked_sessions(self) -> list[Session]:
+        """Remove imported-but-not-yet-slotted sessions (already host-numpy
+        — the export is sunk, so the region tier ships them regardless of
+        stay-home economics)."""
+        out: list[Session] = []
+        for e in self.engines:
+            for sess in e.drain_sessions():
+                self._untrack(sess.req.rid)
+                out.append(sess)
+        return out
+
+    def live_sessions(self) -> list[tuple[int, int, int]]:
+        """``(rid, pos, remaining)`` for every live decode slot — lets a
+        drain planner rank destinations and skip no-win exports without
+        paying any device->host round trip."""
+        out = []
+        for e in self.engines:
+            for req in e.active:
+                if req is None or req.done:
+                    continue
+                pos = e.active_pos(req.rid)
+                if pos is None:
+                    continue
+                remaining = max(req.max_new - len(req.out_tokens), 0)
+                out.append((req.rid, pos, remaining))
+        return out
+
+    def export_for_region(self, rid: int) -> Session:
+        """Freeze one live session for cross-fleet transport and drop its
+        local bookkeeping (the region tier owns it from here).  Raises
+        KeyError if ``rid`` is not active on any engine."""
+        for e in self.engines:
+            if e.active_pos(rid) is not None:
+                sess = e.export_session(rid)
+                self._untrack(rid)
+                return sess
+        raise KeyError(f"rid {rid} is not active on this fleet")
+
+    def can_hold(self, pos: int, remaining: int) -> bool:
+        """Whether any replica in this fleet can finish a session at
+        ``pos`` with ``remaining`` tokens without truncation."""
+        return any(e.can_hold(pos, remaining) for e in self.engines)
+
+    def adopt_session(self, sess: Session) -> int:
+        """Accept a session migrated in from another fleet: place it on
+        the predicted-TPOT-best replica whose cache holds its remaining
+        budget, and track it for serving stats.  Healthy replicas are
+        preferred, but a fitting quarantined one is used before giving up
+        — the feasibility pre-check other fleets run (:meth:`can_hold`)
+        spans ALL replicas, and a session that already crossed the WAN
+        must not be dropped because its only fitting host is slow.  The
+        TTFT was produced (and recorded) wherever the session was born,
+        so no TTFT sample is harvested here.  Returns the replica; raises
+        ValueError when no replica fits."""
+        remaining = max(sess.req.max_new - len(sess.req.out_tokens), 0)
+        healthy = self.router.healthy()
+        ranked = self.router.fleet.ranked_search(
+            int(RequestClass.DECODE), metric=FleetPTT.TPOT,
+            healthy=healthy or None, backlog=self.backlog())
+        ranked += [r for r in range(len(self.engines)) if r not in ranked]
+        for dest in ranked:
+            if not self.engines[dest].can_hold(sess.pos, remaining):
+                continue
+            self.engines[dest].import_session(sess)
+            now = self.clock()
+            self.tracked.append(_Tracked(
+                req=sess.req, replica=dest,
+                req_class=int(RequestClass.DECODE), t_arrival=now,
+                t_dispatch=now, ttft=0.0))   # pre-harvested: first token
+                                             # belongs to the origin fleet
+            self._per_replica[dest] += 1
+            return dest
+        raise ValueError("no replica in this fleet can hold the session")
+
     def pump(self) -> int:
         """One gateway iteration: retry queued, drain quarantined replicas,
         step every engine, harvest TTFTs.  Returns the number of sequences
@@ -406,7 +545,8 @@ class FleetGateway:
                     else t.t_dispatch
                 self.router.record_ttft(t.replica, t.req_class, tok - t0,
                                         prompt_len=len(t.req.prompt))
-                self.router.record_service(t.replica, tok - t0)
+                self.router.record_service(t.replica, tok - t0,
+                                           req_class=t.req_class)
             if t.req.done and t.ttft is not None:
                 self._served += 1       # finished: stop tracking it
             else:

@@ -261,15 +261,19 @@ class FleetRouter:
                 replica, anchor * max(self.detector.drift(replica), 1.0))
 
     def record_service(self, replica: int, seconds: float, *,
-                       units: int = 1) -> None:
+                       units: int = 1,
+                       req_class: int | None = None) -> None:
         """One request's wall service time on ``replica`` — trains the
         per-replica service rate the :class:`QueueAware` cost turns
         backlog into predicted *seconds of wait* with (the lever that
         separates PTT routing from join-shortest-queue).  ``units`` is the
         request's size in whatever unit the caller's ``backlog`` uses
         (1 = whole requests; prompt tokens when the backlog is
-        token-weighted)."""
-        self.fleet.record_service(replica, seconds, units=units)
+        token-weighted).  ``req_class`` additionally trains the per-class
+        split rate (mixed queues are priced per class by callers passing
+        class-resolved backlogs)."""
+        self.fleet.record_service(replica, seconds, units=units,
+                                  req_class=req_class)
 
     # -- views -------------------------------------------------------------
     def healthy(self) -> list[int]:

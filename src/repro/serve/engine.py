@@ -217,6 +217,21 @@ class ServeEngine:
                 f"would truncate at max_seq {self.max_seq}")
         self.sessions_in.append(sess)
 
+    def export_session_wire(self, rid: int) -> bytes:
+        """:meth:`export_session` encoded with the versioned session wire
+        format (:mod:`repro.region.wire`) — the byte form that crosses
+        process/WAN boundaries."""
+        from ..region.wire import encode_session   # avoid import cycle
+        return encode_session(self.export_session(rid))
+
+    def import_session_wire(self, data: bytes, strict: bool = True) -> None:
+        """Accept a session shipped as wire bytes (the far end of
+        :meth:`export_session_wire`); validation errors raise
+        :class:`~repro.region.wire.WireFormatError` before any state is
+        touched."""
+        from ..region.wire import decode_session   # avoid import cycle
+        self.import_session(decode_session(data), strict=strict)
+
     def active_pos(self, rid: int) -> int | None:
         """Decode position of an active request (None if not active) —
         lets a migration planner check placement feasibility without

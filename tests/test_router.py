@@ -331,6 +331,44 @@ def test_ttft_rows_are_size_normalized():
                                      tokens=1000) == pytest.approx(2.0)
 
 
+def test_per_class_service_rates_predict_mixed_queues_better():
+    """The ROADMAP's remaining routing idea, landed: one pooled service
+    rate mispredicts a mixed queue — short interactive prefills drain far
+    faster than long ones — while the per-class split prices each class's
+    queued units at its own learned rate.  The regression bar: on mixed
+    short/long-prompt backlogs, the class-resolved TTFT prediction must
+    beat the pooled one against the true FIFO wait on every mix."""
+    fp = FleetPTT(num_replicas=2, num_classes=len(RequestClass))
+    short, long_ = int(RequestClass.PREFILL_SHORT), int(
+        RequestClass.PREFILL_LONG)
+    rate = {short: 0.02, long_: 0.2}           # seconds per request
+    for r in (0, 1):
+        for _ in range(20):                    # 50/50 mixed traffic trains
+            for c, s in rate.items():          # pooled AND class rows
+                fp.record_service(r, s, req_class=c)
+    pooled = fp.service_time(0)
+    assert 0.02 < pooled < 0.2                 # the mixed-row compromise
+    assert fp.service_time(0, short) == pytest.approx(0.02)
+    assert fp.service_time(0, long_) == pytest.approx(0.2)
+    # mixed queues of equal LENGTH but very different seconds-of-work
+    mixes = [{short: 9, long_: 1}, {short: 1, long_: 9}, {short: 5, long_: 5}]
+    for mix in mixes:
+        true_wait = sum(n * rate[c] for c, n in mix.items())
+        n_total = sum(mix.values())
+        pred_class = fp.predict_ttft(short, 0, mix)
+        pred_pooled = fp.predict_ttft(short, 0, n_total)
+        assert abs(pred_class - true_wait) < abs(pred_pooled - true_wait), (
+            mix, pred_class, pred_pooled, true_wait)
+        assert pred_class == pytest.approx(true_wait)
+    # untrained class rows fall back to the pooled rate: a class-resolved
+    # caller degrades to exactly the pooled prediction, never to bootstrap
+    fp2 = FleetPTT(num_replicas=1, num_classes=len(RequestClass))
+    fp2.record_service(0, 0.1)                 # pooled only
+    assert fp2.service_time(0, short) == pytest.approx(0.1)
+    assert fp2.predict_ttft(short, 0, {short: 4}) == pytest.approx(
+        fp2.predict_ttft(short, 0, 4))
+
+
 def test_admission_tpot_slo_enforced():
     """A replica whose decode-step latency blows the class TPOT budget is
     queued/shed even when its TTFT prediction is fine."""
