@@ -15,6 +15,24 @@ def row(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
+def percentile(samples, q: float) -> float:
+    """Exact q-th percentile (q in [0, 100]) of ``samples`` — the one
+    percentile implementation every benchmark shares (and the reference
+    the obs histogram's bucket-resolution percentile is tested against).
+    0.0 on empty input so summary rows never throw mid-benchmark."""
+    a = np.asarray(samples, dtype=float)
+    return float(np.percentile(a, q)) if a.size else 0.0
+
+
+def latency_summary(samples, **extra) -> dict:
+    """The p50/p99/mean/n dict every serving benchmark reports, with any
+    benchmark-specific keys appended."""
+    a = np.asarray(samples, dtype=float)
+    return {"p50": percentile(a, 50), "p99": percentile(a, 99),
+            "mean": float(a.mean()) if a.size else 0.0, "n": int(a.size),
+            **extra}
+
+
 def run_pair(platform, dag_factory, seeds=range(5), num_cores=None,
              force_noncritical=False):
     """(homogeneous, performance-based) mean throughputs."""

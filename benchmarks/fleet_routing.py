@@ -44,6 +44,7 @@ from repro.router import FleetRouter, SLOPolicy
 from repro.router.admission import Admission
 from repro.serve.scheduler import RequestClass
 
+from . import common
 from .common import row
 
 N_REPLICAS = 8
@@ -70,12 +71,16 @@ def gen_requests(n: int, seed: int, arrival_scale: float):
 
 def simulate(policy: str, n_requests: int = 800, seed: int = 0,
              slo: SLOPolicy | None = None,
-             arrival_scale: float = 0.011, static: bool = False) -> dict:
+             arrival_scale: float = 0.011, static: bool = False,
+             attribution=None) -> dict:
     """Event-driven fleet: each replica is a FIFO server; service time is
     BASE_SERVICE * (prompt_kilotokens) / speed.  The straggler is slow
     during the middle half of the stream (``static=False``, the Fig. 8
     interference window) or for the whole run (``static=True``, a weaker
-    SKU).  Returns TTFT percentiles plus router stats for the ptt policy."""
+    SKU).  Returns TTFT percentiles plus router stats for the ptt policy.
+    ``attribution``: an optional :class:`repro.obs.DecisionLog` handed to
+    the ptt router — every routing decision lands there with its cost
+    breakdown (the acceptance test for decision attribution runs here)."""
     t_end = n_requests * arrival_scale
     window = (0.0, t_end + 1.0) if static else (0.25 * t_end, 0.75 * t_end)
 
@@ -84,7 +89,8 @@ def simulate(policy: str, n_requests: int = 800, seed: int = 0,
             return SLOW_FACTOR
         return 1.0
 
-    router = FleetRouter(N_REPLICAS, slo=slo or SLOPolicy.unlimited())
+    router = FleetRouter(N_REPLICAS, slo=slo or SLOPolicy.unlimited(),
+                         attribution=attribution)
     free_at = np.zeros(N_REPLICAS)
     qdepth = np.zeros(N_REPLICAS, dtype=int)
     qtok = np.zeros(N_REPLICAS, dtype=int)
@@ -147,11 +153,9 @@ def simulate(policy: str, n_requests: int = 800, seed: int = 0,
             # record_step trains the DECODE TPOT row sticky_search reads
             # and feeds the interference detector
             router.record_step(r, service / (plen / 1024.0))
-    t = np.asarray(ttfts)
-    return {"p50": float(np.percentile(t, 50)),
-            "p99": float(np.percentile(t, 99)),
-            "mean": float(t.mean()), "shed": shed, "n": len(t),
-            "stats": router.stats() if policy == "ptt" else None}
+    return common.latency_summary(
+        ttfts, shed=shed,
+        stats=router.stats() if policy == "ptt" else None)
 
 
 def migration_demo(quick: bool = False) -> dict:

@@ -1,0 +1,152 @@
+"""Observability overhead benchmark: fused decode with the null exporter
+vs a live SpanTracer + MetricRegistry.
+
+The telemetry plane's contract is that NOT observing is free and observing
+is cheap: every instrumented hot path guards on one ``tracer.enabled``
+attribute check (plus ``is not None`` for metric children), so the default
+engine pays nothing measurable, and a fully attached engine pays a deque
+append + a couple of float adds per decode chunk.  This benchmark prices
+both against the same fused-decode workload as ``serve_decode``:
+
+* **null** — a plain engine (NULL_TRACER, no registry): the configuration
+  every other benchmark and the serving defaults run;
+* **instrumented** — the same engine with a live :class:`SpanTracer` and
+  :class:`MetricRegistry` attached (per-chunk spans for every active
+  request, step-latency histogram, token counters).
+
+The gated figure is each arm's **best (min) p50 per-token step latency**
+over ``REPEATS`` interleaved runs: the true cost of a step is a lower
+bound that scheduler noise only ever adds to, so min-of-N converges on it
+where whole-run tokens/s (one slow run anywhere in the stream) does not —
+on a shared CI runner the raw throughput ratio swings +-10% between
+identical arms.  CI asserts ``ratio >= 0.95`` (instrumented within 5% of
+null) from ``BENCH_obs.json`` and archives the instrumented run's
+Chrome/Perfetto trace (``BENCH_obs_trace.json`` — load it at
+https://ui.perfetto.dev) as a sample artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import percentile, row
+
+ARCH = "smollm-135m"
+BATCH = 4
+MAX_SEQ = 160
+PROMPT_LEN = 8
+CHUNK = 4
+REPEATS = 5
+
+
+def _build():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config(ARCH, reduced=True)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _run_engine(cfg, m, params, *, instrumented: bool, max_new: int):
+    """Decode ``max_new`` tokens for BATCH prompts on a fused engine;
+    returns steady-state decode per-step wall times and tokens/s, plus the
+    tracer/registry when instrumented (for the sample artifacts)."""
+    from repro.obs import MetricRegistry, SpanTracer
+    from repro.serve import Request, ServeEngine
+
+    rng = np.random.default_rng(0)
+    engine = ServeEngine(m, params, max_batch=BATCH, max_seq=MAX_SEQ,
+                         decode_chunk=CHUNK, fused=True)
+    tracer = registry = None
+    if instrumented:
+        tracer, registry = SpanTracer(name="bench"), MetricRegistry()
+        engine.attach_obs(tracer, registry, name="bench/r0")
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, PROMPT_LEN),
+                    max_new=max_new) for i in range(BATCH)]
+    for r in reqs:
+        engine.submit(r)
+    engine.step()                      # admission + first decode: excluded
+    steps, tokens, elapsed = [], 0, 0.0
+    while engine.active_count():
+        before = sum(len(r.out_tokens) for r in reqs)
+        t0 = time.perf_counter()
+        engine.step()
+        dt = time.perf_counter() - t0
+        produced = sum(len(r.out_tokens) for r in reqs) - before
+        if produced:
+            steps.append(dt / engine.decode_chunk)
+            tokens += produced
+            elapsed += dt
+    streams = [list(r.out_tokens) for r in reqs]
+    return {
+        "tokens": tokens,
+        "tok_s": tokens / elapsed if elapsed else 0.0,
+        "p50_ms": 1e3 * percentile(steps, 50),
+        "p99_ms": 1e3 * percentile(steps, 99),
+        "streams": streams,
+        "tracer": tracer,
+        "registry": registry,
+    }
+
+
+def main(quick: bool = False) -> None:
+    cfg, m, params = _build()
+    max_new = 32 if quick else 128
+    # warm-up: pay the fused jit compile before any clock starts
+    _run_engine(cfg, m, params, instrumented=False, max_new=12)
+
+    # interleave the arms so drift on a shared runner hits both equally;
+    # keep each arm's best (min p50 step latency) run — see module docstring
+    best = {"null": None, "instrumented": None}
+    for _ in range(REPEATS):
+        for name, instrumented in (("null", False), ("instrumented", True)):
+            res = _run_engine(cfg, m, params, instrumented=instrumented,
+                              max_new=max_new)
+            if best[name] is None or res["p50_ms"] < best[name]["p50_ms"]:
+                best[name] = res
+
+    # instrumentation must be a pure observer: identical greedy streams
+    assert best["instrumented"]["streams"] == best["null"]["streams"], \
+        "instrumented decode diverged from the null-exporter tokens"
+
+    # throughput-equivalent ratio off the de-noised step latencies:
+    # 1.0 = free, 0.95 = instrumented steps 5% slower (the CI floor)
+    ratio = best["null"]["p50_ms"] / best["instrumented"]["p50_ms"]
+    for name in ("null", "instrumented"):
+        res = best[name]
+        row(f"obs_overhead_{name}", 1e6 / max(res["tok_s"], 1e-9),
+            f"tok_s={res['tok_s']:.0f};p50={res['p50_ms']:.3f}ms;"
+            f"p99={res['p99_ms']:.3f}ms;n_tok={res['tokens']}")
+    row("obs_overhead_ratio", 1e6 / best["instrumented"]["tok_s"],
+        f"instrumented_vs_null={ratio:.3f}x;batch={BATCH};chunk={CHUNK}")
+
+    tracer, registry = (best["instrumented"]["tracer"],
+                        best["instrumented"]["registry"])
+    trace_out = os.environ.get("BENCH_OBS_TRACE_OUT", "BENCH_obs_trace.json")
+    tracer.export(trace_out)
+
+    bench = {
+        "arch": ARCH, "reduced": True, "batch": BATCH, "chunk": CHUNK,
+        "max_new": max_new, "quick": quick, "repeats": REPEATS,
+        "ratio_instrumented_vs_null": ratio,
+        "trace_events": len(tracer.events),
+        "metrics_snapshot": registry.snapshot(),
+        **{name: {k: v for k, v in res.items()
+                  if k not in ("streams", "tracer", "registry")}
+           for name, res in best.items()},
+    }
+    out = os.environ.get("BENCH_OBS_OUT", "BENCH_obs.json")
+    with open(out, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,7 @@ import numpy as np
 from repro.distributed.elastic import RooflineLatencyModel
 from repro.serve.scheduler import ElasticServeScheduler, classify_prefill
 
-from .common import row
+from .common import percentile, row
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
 
@@ -90,12 +90,12 @@ def main(quick: bool = False) -> None:
     for policy in ("static", "ptt"):
         t = _simulate(policy, n_requests=n)
         row(f"pod_serving_{policy}", 1e6 * float(t.mean()),
-            f"mean_ttft={t.mean():.3f}s;p95={np.percentile(t, 95):.3f}s")
+            f"mean_ttft={t.mean():.3f}s;p95={percentile(t, 95):.3f}s")
     ts = _simulate("static", n_requests=n)
     tp = _simulate("ptt", n_requests=n)
     row("pod_serving_speedup", 1e6 * float(tp.mean()),
         f"mean_ttft_improvement={ts.mean()/tp.mean():.2f}x;"
-        f"p95_improvement={np.percentile(ts,95)/np.percentile(tp,95):.2f}x")
+        f"p95_improvement={percentile(ts, 95)/percentile(tp, 95):.2f}x")
 
 
 if __name__ == "__main__":

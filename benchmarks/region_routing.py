@@ -41,6 +41,7 @@ import numpy as np
 from repro.region import RegionRouter
 from repro.serve.scheduler import classify_request
 
+from . import common
 from .common import row
 
 N_REGIONS = 3
@@ -121,11 +122,7 @@ def simulate(policy: str, n_requests: int = 1500, seed: int = 0,
                 router.record_rtt(origin, f, float(RTT[origin, f]))
         # "blind" never records RTT: its WanCost term stays untrained/zero
         # and the search degenerates to latency-blind fleet-picking
-    t = np.asarray(ttfts)
-    return {"p50": float(np.percentile(t, 50)),
-            "p99": float(np.percentile(t, 99)),
-            "mean": float(t.mean()), "n": len(t),
-            "wan_hops_frac": wan_hops / len(t)}
+    return common.latency_summary(ttfts, wan_hops_frac=wan_hops / len(ttfts))
 
 
 def failover_demo(quick: bool = False) -> dict:

@@ -14,8 +14,8 @@ import traceback
 
 from . import (fig5_heatmap, fig6_kernels, fig7_speedup, fig8_interference,
                fig9_vgg_scaling, fig10_widths, fleet_routing, kernel_bench,
-               pod_serving, pod_straggler, region_routing, roofline,
-               serve_decode)
+               obs_overhead, pod_serving, pod_straggler, region_routing,
+               roofline, serve_decode)
 
 MODULES = (
     ("fig5_heatmap", fig5_heatmap),
@@ -26,6 +26,7 @@ MODULES = (
     ("fig10_widths", fig10_widths),
     ("fleet_routing", fleet_routing),
     ("kernel_bench", kernel_bench),
+    ("obs_overhead", obs_overhead),
     ("pod_serving", pod_serving),
     ("pod_straggler", pod_straggler),
     ("region_routing", region_routing),

@@ -26,7 +26,7 @@ import time
 
 import numpy as np
 
-from .common import row
+from .common import percentile, row
 
 ARCH = "smollm-135m"
 BATCH = 4
@@ -77,8 +77,8 @@ def _run_engine(cfg, m, params, *, fused: bool, chunk: int, max_new: int):
     return {
         "tokens": tokens,
         "tok_s": tokens / elapsed if elapsed else 0.0,
-        "p50_ms": 1e3 * float(np.percentile(steps, 50)) if steps else 0.0,
-        "p99_ms": 1e3 * float(np.percentile(steps, 99)) if steps else 0.0,
+        "p50_ms": 1e3 * percentile(steps, 50),
+        "p99_ms": 1e3 * percentile(steps, 99),
         "streams": [list(r.out_tokens) for r in reqs],
     }
 

@@ -146,6 +146,12 @@ class SearchContext:
     session home) — what :class:`WanCost` charges hops away from.  Unlike
     ``current`` it carries no sticky/migration semantics: a fresh request
     has an origin but no current placement.
+    ``attribution``: decision-attribution hook, or None (the default — no
+    cost is paid).  When set, :meth:`TraceTable.search` calls it once per
+    search with a :class:`SearchAttribution`: the per-candidate,
+    per-:class:`CostModel`-term cost breakdown plus the chosen item, so
+    "why did this request land on replica 3" is answerable from telemetry
+    (see :mod:`repro.obs.attribution`).
     """
     metric: int | str = 0
     backlog: Sequence[int | Mapping] | None = None
@@ -153,6 +159,7 @@ class SearchContext:
     current: object = None
     service: Callable[..., float] | None = None
     origin: object = None
+    attribution: Callable[["SearchAttribution"], None] | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +190,57 @@ class Sum(CostModel):
 
     def __add__(self, other: CostModel) -> "Sum":
         return Sum(self.parts + (other,))
+
+
+# ---------------------------------------------------------------------------
+# decision attribution (the telemetry plane's "why this candidate" record)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CandidateCost:
+    """One candidate's scoring under a search: the raw table ``value``
+    (0.0 = untrained), the ``total`` cost-model output, and the per-term
+    breakdown (``{cost model name: contribution}`` — the terms of a
+    :class:`Sum` scored separately; their sum equals ``total`` because
+    :class:`Sum` is additive)."""
+    item: object
+    key: tuple
+    value: float
+    total: float
+    terms: dict
+    tie: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchAttribution:
+    """One search's full decision record: every candidate's
+    :class:`CandidateCost` plus what the policy chose (for a ranked
+    policy, the head of the ranking).  Delivered to
+    ``SearchContext.attribution``."""
+    chosen: object
+    metric: int | str
+    policy: str
+    candidates: tuple
+
+
+def cost_terms(cost: CostModel, value: float, cand: Candidate,
+               ctx: "SearchContext") -> dict:
+    """Per-term cost breakdown of one candidate: each part of a
+    :class:`Sum` is scored separately under its class name (``#i``
+    suffixes disambiguate repeated classes); a non-composite model yields
+    a single term.  Additivity of :class:`Sum` guarantees the terms sum
+    to ``cost.cost(value, cand, ctx)`` exactly."""
+    parts = cost.parts if isinstance(cost, Sum) else (cost,)
+    terms: dict = {}
+    for p in parts:
+        name = type(p).__name__
+        if name in terms:
+            i = 2
+            while f"{name}#{i}" in terms:
+                i += 1
+            name = f"{name}#{i}"
+        terms[name] = p.cost(value, cand, ctx)
+    return terms
 
 
 @dataclasses.dataclass(frozen=True)
@@ -456,8 +514,21 @@ class TraceTable(EMASearchMixin):
             v = float(self._tab[c.key + (mi,)])
             scored.append(Scored(c, v, cost.cost(v, c, ctx)))
         assert scored, "no valid candidates to search"
-        return (policy if policy is not None else GlobalSearch()).select(
-            scored, ctx)
+        policy = policy if policy is not None else GlobalSearch()
+        picked = policy.select(scored, ctx)
+        if ctx.attribution is not None:
+            chosen = picked[0] if isinstance(picked, list) else picked
+            ctx.attribution(SearchAttribution(
+                chosen=chosen, metric=ctx.metric,
+                policy=type(policy).__name__,
+                candidates=tuple(
+                    CandidateCost(item=s.cand.item, key=s.cand.key,
+                                  value=s.value, total=s.primary,
+                                  terms=cost_terms(cost, s.value, s.cand,
+                                                   ctx),
+                                  tie=s.cand.tie)
+                    for s in scored)))
+        return picked
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,40 @@
+"""Telemetry plane: request spans, metric registry, decision attribution.
+
+The paper's claim is that a lightweight latency manifest can *infer*
+performance and interference; this package makes those inferences —
+and the placements acted on them — visible:
+
+* :mod:`repro.obs.trace` — per-request span tracer with trace ids that
+  survive the session wire format, exportable as Chrome/Perfetto
+  trace-event JSON (:class:`SpanTracer`; :data:`NULL_TRACER` default);
+* :mod:`repro.obs.metrics` — counters/gauges/fixed-bucket histograms
+  with Prometheus text exposition and JSON snapshot
+  (:class:`MetricRegistry`);
+* :mod:`repro.obs.attribution` — per-candidate, per-cost-model-term
+  breakdown of every TraceTable search decision (:class:`DecisionLog`),
+  fed by the ``SearchContext.attribution`` hook.
+
+All of it is opt-in: every instrumented class defaults to the null
+tracer / no registry / no log, and the null-path decode overhead is
+benchmarked (``benchmarks/obs_overhead.py``) and CI-bounded.
+
+``CANONICAL_STATS`` names the counter keys every scale's ``stats()``
+facade agrees on (old per-scale keys remain as aliases for one release).
+"""
+
+from .attribution import DecisionLog, DecisionRecord
+from .metrics import (BYTE_BUCKETS, LATENCY_BUCKETS, Counter, Gauge,
+                      Histogram, MetricRegistry)
+from .trace import NULL_TRACER, NullTracer, SpanTracer
+
+#: Counter keys shared by ServeEngine.stats(), FleetGateway.stats(), and
+#: RegionGateway.stats() — the unified naming the consistency test pins.
+CANONICAL_STATS = ("requests_served", "requests_shed", "sessions_migrated",
+                   "queue_depth")
+
+__all__ = [
+    "BYTE_BUCKETS", "LATENCY_BUCKETS", "CANONICAL_STATS",
+    "Counter", "Gauge", "Histogram", "MetricRegistry",
+    "DecisionLog", "DecisionRecord",
+    "NULL_TRACER", "NullTracer", "SpanTracer",
+]

@@ -17,12 +17,12 @@ from ..core.tracetable import WanCost
 from .gateway import RegionGateway
 from .router import RegionDecision, RegionRouter
 from .transport import LoopbackTransport, Transport
-from .wire import (WIRE_MAGIC, WIRE_VERSION, WireFormatError,
+from .wire import (WIRE_COMPAT, WIRE_MAGIC, WIRE_VERSION, WireFormatError,
                    decode_session, encode_session, wire_header)
 
 __all__ = [
     "RegionDecision", "RegionGateway", "RegionRouter",
     "LoopbackTransport", "Transport", "WanCost",
-    "WIRE_MAGIC", "WIRE_VERSION", "WireFormatError",
+    "WIRE_COMPAT", "WIRE_MAGIC", "WIRE_VERSION", "WireFormatError",
     "decode_session", "encode_session", "wire_header",
 ]

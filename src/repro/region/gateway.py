@@ -38,6 +38,7 @@ from typing import Sequence
 import numpy as np
 
 from ..models.sessions import session_nbytes
+from ..obs import BYTE_BUCKETS, NULL_TRACER
 from ..router.gateway import FleetGateway
 from ..serve.engine import Request, Session
 from .router import RegionDecision, RegionRouter
@@ -70,6 +71,46 @@ class RegionGateway:
         self._wan_bytes = 0                      # wire bytes on links
         self._raw_bytes = 0                      # pre-compression cache bytes
         self._stay_home = 0                      # drain exports skipped
+        # observability (attach_obs): null tracer / no registry by default
+        self.tracer = NULL_TRACER
+        self.metrics = None
+        self.obs_name = "region"
+        self._m_ships = self._m_stay = None
+        self._h_ship_bytes = self._h_ship_rtt = None
+
+    # -- observability -----------------------------------------------------
+    def attach_obs(self, tracer=None, metrics=None,
+                   name: str | None = None) -> None:
+        """Attach a :class:`~repro.obs.SpanTracer` and/or
+        :class:`~repro.obs.MetricRegistry` to this gateway and every fleet
+        that has none of its own (fleets propagate on down to engines) —
+        one call at the region instruments all four scales.  Fleets are
+        tracked as ``{name}/f{i}``; WAN ships become spans on the region
+        track, stay-home skips instant events."""
+        if name is not None:
+            self.obs_name = name
+        if tracer is not None:
+            self.tracer = tracer
+        if metrics is not None:
+            self.metrics = metrics
+            g = self.obs_name
+            self._m_ships = metrics.counter(
+                "region_wan_ships_total",
+                "Sessions shipped across WAN links", region=g)
+            self._m_stay = metrics.counter(
+                "region_stay_home_skips_total",
+                "Drain exports skipped because staying home won", region=g)
+            self._h_ship_bytes = metrics.histogram(
+                "region_ship_bytes", "Wire bytes per shipped session",
+                buckets=BYTE_BUCKETS, region=g)
+            self._h_ship_rtt = metrics.histogram(
+                "region_ship_rtt_seconds",
+                "Observed per-ship link delivery time", region=g)
+        for i, gw in enumerate(self.fleets):
+            t = tracer if gw.tracer is NULL_TRACER else None
+            m = metrics if gw.metrics is None else None
+            if t is not None or m is not None:
+                gw.attach_obs(t, m, name=f"{self.obs_name}/f{i}")
 
     # -- ingress -----------------------------------------------------------
     def class_backlogs(self) -> list[dict[int, int]]:
@@ -114,6 +155,7 @@ class RegionGateway:
         self.router.restore(fleet)
 
     def _ship_session(self, sess: Session, src: int, dst: int) -> None:
+        t0 = self.clock()
         self._raw_bytes += session_nbytes(sess.cache)
         data = encode_session(sess)
         delivered = self.transport.ship(data, src, dst)
@@ -135,6 +177,21 @@ class RegionGateway:
             self._meta[sess.req.rid]["fleet"] = dst
         self._wan_ships += 1
         self._wan_bytes += len(data)
+        if self.tracer.enabled:
+            # the wire carried the session's trace context (v2's "trace"
+            # key), so this span lands on the SAME timeline the request's
+            # engine events are on — encode->ship->decode->adopt, end to end
+            if sess.trace is not None:
+                self.tracer.adopt(sess.req.rid, sess.trace["trace_id"])
+            self.tracer.complete(
+                "wan-ship", self.tracer.trace_for(sess.req.rid),
+                self.obs_name, ts=t0, dur=self.clock() - t0, src=src,
+                dst=dst, wire_bytes=len(data))
+        if self._m_ships is not None:
+            self._m_ships.inc()
+            self._h_ship_bytes.observe(float(len(data)))
+            if rtt > 0.0:
+                self._h_ship_rtt.observe(rtt)
 
     def _drain_browned_out(self) -> int:
         """Empty every browned-out fleet: re-route unstarted requests,
@@ -178,6 +235,12 @@ class RegionGateway:
                     # stay-home win (or nowhere fits): the WAN move does
                     # not pay — no export, no device->host round trip
                     self._stay_home += 1
+                    if self._m_stay is not None:
+                        self._m_stay.inc()
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            "stay-home", self.tracer.trace_for(rid),
+                            self.obs_name, fleet=src, pos=pos)
                     continue
                 self._ship_session(gw.export_for_region(rid), src,
                                    viable[0])
@@ -246,10 +309,18 @@ class RegionGateway:
                 if m["ttft"] is not None}
 
     def stats(self) -> dict:
+        fleet_stats = [gw.stats() for gw in self.fleets]
         return {**self.router.stats(),
+                # unified cross-scale counters (repro.obs.CANONICAL_STATS);
+                # "wan_ships"/"fleet_served" remain as legacy aliases
+                "requests_served": sum(s["requests_served"]
+                                       for s in fleet_stats),
+                "requests_shed": sum(s["requests_shed"]
+                                     for s in fleet_stats),
+                "sessions_migrated": self._wan_ships,
+                "queue_depth": sum(s["queue_depth"] for s in fleet_stats),
                 "wan_ships": self._wan_ships,
                 "wan_bytes": self._wan_bytes,
                 "raw_session_bytes": self._raw_bytes,
                 "stay_home_skips": self._stay_home,
-                "fleet_served": [gw.stats()["served"]
-                                 for gw in self.fleets]}
+                "fleet_served": [s["served"] for s in fleet_stats]}

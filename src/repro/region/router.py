@@ -56,11 +56,15 @@ class RegionRouter:
                  egress_per_byte: float = 0.0,
                  bytes_per_token: float = 0.0,
                  migration: MigrationCost | None = None,
-                 migrate_ratio: float = 2.0):
+                 migrate_ratio: float = 2.0,
+                 attribution=None):
         """``egress_per_byte`` x ``bytes_per_token`` is the per-token
         charge for shipping state over a link (0.0 = RTT-only WAN model);
         ``migration`` additionally charges the destination-side cache
-        re-ingest on sticky/drain moves."""
+        re-ingest on sticky/drain moves.  ``attribution``: an optional
+        :class:`~repro.obs.DecisionLog` — every placement and drain-rank
+        search lands there with its per-candidate WanCost/QueueAware/...
+        breakdown and a fleet-row snapshot."""
         if num_fleets < 1:
             raise ValueError("need at least one fleet")
         self.num_fleets = num_fleets
@@ -76,6 +80,32 @@ class RegionRouter:
         self.sticky_cost = (sticky + migration if migration is not None
                             else sticky)
         self.browned_out: set[int] = set()
+        self.attribution = attribution
+
+    # -- observability -----------------------------------------------------
+    def _rows_fn(self, c: RequestClass):
+        """Per-candidate fleet evidence for a decision record: TTFT/TPOT
+        EMA rows, learned service rate, brownout state."""
+        def rows(sa) -> dict:
+            out = {}
+            for cand in sa.candidates:
+                f = cand.item
+                out[f] = {
+                    "ttft": self.table.value(int(c), f, FleetPTT.TTFT),
+                    "tpot": self.table.value(int(RequestClass.DECODE), f,
+                                             FleetPTT.TPOT),
+                    "trained": self.table.trained(int(c), f, FleetPTT.TTFT),
+                    "service": self.table.service_time(f),
+                    "browned_out": f in self.browned_out,
+                }
+            return out
+        return rows
+
+    def _attr_hook(self, kind: str, c: RequestClass, **meta):
+        if self.attribution is None:
+            return None
+        return self.attribution.hook(kind, self._rows_fn(c),
+                                     req_class=c.name, **meta)
 
     # -- brownout state ----------------------------------------------------
     def brownout(self, fleet: int) -> None:
@@ -108,7 +138,10 @@ class RegionRouter:
             f = self.table.sticky_search(
                 c, home, healthy=healthy, backlog=backlog,
                 tokens=prompt_len, cost=self.sticky_cost,
-                migrate_ratio=self.migrate_ratio)
+                migrate_ratio=self.migrate_ratio,
+                attribution=self._attr_hook("region-route", c,
+                                            origin=origin,
+                                            affinity=affinity))
         else:
             # global search (fresh request, or the affinity fleet is
             # browned out): hops are charged — and reported — from the
@@ -116,7 +149,8 @@ class RegionRouter:
             home = origin
             f = self.table.global_search(
                 c, metric=FleetPTT.TTFT, healthy=healthy, backlog=backlog,
-                tokens=prompt_len, origin=home, cost=self.cost)
+                tokens=prompt_len, origin=home, cost=self.cost,
+                attribution=self._attr_hook("region-route", c, origin=origin))
         b = backlog[f] if backlog is not None else 0
         pred = self.table.predict_ttft(int(c), f, b, tokens=prompt_len)
         # the hop charge comes from the SAME cost model the search ran
@@ -140,7 +174,9 @@ class RegionRouter:
             int(RequestClass.DECODE), metric=FleetPTT.TPOT,
             healthy=[*self.healthy(), source], backlog=backlog,
             tokens=pos, current=source, origin=source,
-            cost=self.sticky_cost)
+            cost=self.sticky_cost,
+            attribution=self._attr_hook("region-drain", RequestClass.DECODE,
+                                        source=source, pos=pos))
 
     # -- feedback ----------------------------------------------------------
     def record_rtt(self, src: int, dst: int, seconds: float) -> None:

@@ -38,7 +38,13 @@ from ..checkpoint.store import compress, decompress, default_codec
 from ..serve.engine import Request, Session
 
 WIRE_MAGIC = b"RSES"
-WIRE_VERSION = 1
+# v1: the original layout.  v2 adds one OPTIONAL payload key, "trace"
+# (the request's trace context — see repro.obs.trace), so v1 payloads
+# decode unchanged under the v2 reader: same header struct, same body
+# layout, the new key simply absent.  Writers always emit the current
+# version; readers accept every version in WIRE_COMPAT.
+WIRE_VERSION = 2
+WIRE_COMPAT = frozenset({1, 2})
 _CODEC_IDS = {"zlib": 0, "zstd": 1}
 _CODEC_NAMES = {v: k for k, v in _CODEC_IDS.items()}
 # magic(4) + version(1) + codec(1) + crc32(4)
@@ -85,6 +91,10 @@ def encode_session(sess: Session, codec: str | None = None) -> bytes:
         "cur_token": int(sess.cur_token),
         "cache": {k: _pack_array(v) for k, v in sess.cache.items()},
     }
+    if sess.trace is not None:
+        # v2's optional trace context: the request's causal identity rides
+        # the wire so the importing engine continues the same timeline
+        payload["trace"] = sess.trace
     body = compress(msgpack.packb(payload, use_bin_type=True), codec)
     header = _HEADER.pack(WIRE_MAGIC, WIRE_VERSION, _CODEC_IDS[codec],
                           zlib.crc32(body) & 0xFFFFFFFF)
@@ -102,13 +112,13 @@ def wire_header(data: bytes) -> dict:
     if magic != WIRE_MAGIC:
         raise WireFormatError(
             f"bad magic {magic!r}: not a session wire payload")
-    if version != WIRE_VERSION:
-        # strict equality: the CRC covers only the body, so a corrupted
-        # version byte (e.g. 1 -> 0) must fail HERE, not be decoded under
-        # the wrong layout (grow an explicit compat map when v2 exists)
+    if version not in WIRE_COMPAT:
+        # explicit compat set: the CRC covers only the body, so a corrupted
+        # version byte (e.g. 2 -> 0) must fail HERE, not be decoded under
+        # the wrong layout; v1 is readable (v2 only added an optional key)
         raise WireFormatError(
             f"unsupported session wire version {version} "
-            f"(this build reads {WIRE_VERSION})")
+            f"(this build reads {sorted(WIRE_COMPAT)})")
     codec = _CODEC_NAMES.get(codec_id)
     if codec is None:
         raise WireFormatError(f"unknown wire codec id {codec_id}")
@@ -143,7 +153,8 @@ def decode_session(data: bytes) -> Session:
         return Session(req=req, pos=payload["pos"],
                        cur_token=payload["cur_token"],
                        cache={k: _unpack_array(v)
-                              for k, v in payload["cache"].items()})
+                              for k, v in payload["cache"].items()},
+                       trace=payload.get("trace"))   # absent on v1 payloads
     except WireFormatError:
         raise
     except RuntimeError as e:

@@ -142,34 +142,41 @@ class FleetPTT(EMASearchMixin):
 
     def _context(self, metric: int, backlog: Sequence[int | Mapping] | None,
                  tokens: int, current: int | None = None,
-                 origin: int | None = None) -> SearchContext:
+                 origin: int | None = None,
+                 attribution=None) -> SearchContext:
         return SearchContext(metric=metric, backlog=backlog, tokens=tokens,
                              current=current, service=self.service_time,
-                             origin=origin)
+                             origin=origin, attribution=attribution)
 
     def global_search(self, req_class: int, metric: int = TTFT,
                       healthy: Iterable[int] | None = None,
                       backlog: Sequence[int | Mapping] | None = None, *,
                       tokens: int = 1, origin: int | None = None,
-                      cost: CostModel | None = None) -> int:
+                      cost: CostModel | None = None,
+                      attribution=None) -> int:
         """Min-predicted-cost replica over the healthy set (critical
         traffic; the fleet analogue of the paper's global PTT search).
         Default cost: :class:`QueueAware` — ties (and the all-untrained
         bootstrap) break toward the shortest queue.  ``origin`` marks
         where the request's bytes live so a composed
         :class:`~repro.core.tracetable.WanCost` can charge cross-link
-        placement (the region tier's hop charge)."""
+        placement (the region tier's hop charge).  ``attribution``: an
+        optional :class:`~repro.core.tracetable.SearchAttribution` sink
+        (see :mod:`repro.obs.attribution`) recording the per-candidate
+        cost breakdown of this decision — all three searches thread it."""
         return self._t.search(
             self._candidates(req_class, healthy, backlog),
             cost if cost is not None else QueueAware(), GlobalSearch(),
-            self._context(metric, backlog, tokens, origin=origin))
+            self._context(metric, backlog, tokens, origin=origin,
+                          attribution=attribution))
 
     def ranked_search(self, req_class: int, metric: int = TTFT,
                       healthy: Iterable[int] | None = None,
                       backlog: Sequence[int | Mapping] | None = None, *,
                       tokens: int = 1, current: int | None = None,
                       origin: int | None = None,
-                      cost: CostModel | None = None) -> list[int]:
+                      cost: CostModel | None = None,
+                      attribution=None) -> list[int]:
         """All candidates in ascending predicted-cost order (same cost as
         ``global_search``) — for callers that need a fallback chain, e.g.
         session migration trying the next-best replica when the best one
@@ -180,14 +187,15 @@ class FleetPTT(EMASearchMixin):
             self._candidates(req_class, healthy, backlog),
             cost if cost is not None else QueueAware(), RankedSearch(),
             self._context(metric, backlog, tokens, current=current,
-                          origin=origin))
+                          origin=origin, attribution=attribution))
 
     def sticky_search(self, req_class: int, replica: int, metric: int = TPOT,
                       healthy: Iterable[int] | None = None,
                       migrate_ratio: float = 2.0, *,
                       backlog: Sequence[int | Mapping] | None = None,
                       tokens: int = 1,
-                      cost: CostModel | None = None) -> int:
+                      cost: CostModel | None = None,
+                      attribution=None) -> int:
         """Stay on ``replica`` unless it is unhealthy or the best healthy
         replica beats it by more than ``migrate_ratio`` (non-critical
         traffic: avoid migration, only avoid disasters — the fleet analogue
@@ -199,7 +207,8 @@ class FleetPTT(EMASearchMixin):
             self._candidates(req_class, healthy, backlog),
             cost if cost is not None else Latency(),
             StickySearch(migrate_ratio),
-            self._context(metric, backlog, tokens, current=replica))
+            self._context(metric, backlog, tokens, current=replica,
+                          attribution=attribution))
 
     # -- admission signal --------------------------------------------------
     def predict_ttft(self, req_class: int, replica: int,

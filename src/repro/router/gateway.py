@@ -43,6 +43,7 @@ from collections import deque
 from typing import Sequence
 
 from ..core.tracetable import QueueAware
+from ..obs import NULL_TRACER
 from ..serve.engine import Request, ServeEngine, Session
 from ..serve.scheduler import RequestClass, classify_request
 from .admission import Admission
@@ -98,6 +99,50 @@ class FleetGateway:
         for i, e in enumerate(self.engines):
             e.on_step_latency = (
                 lambda dt, _r=i: self.router.record_step(_r, dt))
+        # observability (attach_obs): null tracer / no registry by default
+        self.tracer = NULL_TRACER
+        self.metrics = None
+        self.obs_name = "fleet"
+        self._m_served = self._m_shed = self._m_migrations = None
+        self._h_ttft = self._h_queue_wait = None
+
+    # -- observability -----------------------------------------------------
+    def attach_obs(self, tracer=None, metrics=None,
+                   name: str | None = None) -> None:
+        """Attach a :class:`~repro.obs.SpanTracer` and/or
+        :class:`~repro.obs.MetricRegistry` to this gateway, its router, and
+        every engine that has no explicit tracer/registry of its own
+        (engines keep one attached directly — the identity check against
+        :data:`~repro.obs.NULL_TRACER` — so a caller can still wire a
+        replica separately).  Engines are tracked as ``{name}/r{i}``."""
+        if name is not None:
+            self.obs_name = name
+        if tracer is not None:
+            self.tracer = tracer
+        if metrics is not None:
+            self.metrics = metrics
+            g = self.obs_name
+            self._m_served = metrics.counter(
+                "fleet_requests_served_total",
+                "Requests finished fleet-wide", fleet=g)
+            self._m_shed = metrics.counter(
+                "fleet_requests_shed_total",
+                "Requests dropped by weighted fair shedding", fleet=g)
+            self._m_migrations = metrics.counter(
+                "fleet_sessions_migrated_total",
+                "Live sessions moved off quarantined replicas", fleet=g)
+            self._h_ttft = metrics.histogram(
+                "fleet_ttft_seconds",
+                "Client-facing TTFT (arrival -> first token)", fleet=g)
+            self._h_queue_wait = metrics.histogram(
+                "fleet_queue_wait_seconds",
+                "Gateway arrival -> engine dispatch wait", fleet=g)
+        self.router.attach_obs(tracer, metrics, name=self.obs_name)
+        for i, e in enumerate(self.engines):
+            t = tracer if e.tracer is NULL_TRACER else None
+            m = metrics if e.metrics is None else None
+            if t is not None or m is not None:
+                e.attach_obs(t, m, name=f"{self.obs_name}/r{i}")
 
     # -- ingress -----------------------------------------------------------
     def backlog(self) -> list[int]:
@@ -137,6 +182,10 @@ class FleetGateway:
         if d.action is Admission.ADMIT:
             self._dispatch(req, d, t_arrival)
         elif d.action is Admission.QUEUE:
+            if self.tracer.enabled:
+                self.tracer.instant("queue", self.tracer.trace_for(req.rid),
+                                    self.obs_name,
+                                    predicted_ttft=d.predicted_ttft)
             self.held.append((req, affinity, 0, t_arrival))
         elif self._shed_or_displace(req, d.req_class):
             self.held.append((req, affinity, 0, t_arrival))
@@ -145,12 +194,19 @@ class FleetGateway:
 
     def _dispatch(self, req: Request, d: RouteDecision,
                   t_arrival: float) -> None:
+        t_dispatch = self.clock()
         self.tracked.append(_Tracked(req=req, replica=d.replica,
                                      req_class=int(d.req_class),
                                      t_arrival=t_arrival,
-                                     t_dispatch=self.clock(),
+                                     t_dispatch=t_dispatch,
                                      probe=d.probe))
         self._per_replica[d.replica] += 1
+        if self.tracer.enabled:
+            self.tracer.instant("admit", self.tracer.trace_for(req.rid),
+                                self.obs_name, replica=d.replica,
+                                probe=d.probe)
+        if self._h_queue_wait is not None:
+            self._h_queue_wait.observe(t_dispatch - t_arrival)
         self.engines[d.replica].submit(req)
 
     # -- weighted fair shedding --------------------------------------------
@@ -162,6 +218,11 @@ class FleetGateway:
             self._tenant_debt.get(req.tenant, 0.0) + w)
         self.shed.append(req)
         self.shed_total += 1
+        if self._m_shed is not None:
+            self._m_shed.inc()
+        if self.tracer.enabled:
+            self.tracer.instant("shed", self.tracer.trace_for(req.rid),
+                                self.obs_name, tenant=str(req.tenant))
 
     def _displace_lower_priority(self, req_class) -> bool:
         """If a held request has strictly lower class priority, shed *it*
@@ -262,7 +323,9 @@ class FleetGateway:
         order = self.router.fleet.ranked_search(
             c, metric=FleetPTT.TPOT, healthy=[*healthy, source],
             backlog=self.backlog(), tokens=pos, current=source,
-            cost=QueueAware(value_per_token=False) + mig)
+            cost=QueueAware(value_per_token=False) + mig,
+            attribution=self.router.attr_hook(
+                "migrate-pays", RequestClass.DECODE, source=source, pos=pos))
         return order[0] != source
 
     def _place_session(self, sess, source: int,
@@ -278,7 +341,10 @@ class FleetGateway:
         *before* the export."""
         for dest in self.router.fleet.ranked_search(
                 int(RequestClass.DECODE), metric=FleetPTT.TPOT,
-                healthy=healthy, backlog=self.backlog()):
+                healthy=healthy, backlog=self.backlog(),
+                attribution=self.router.attr_hook(
+                    "migrate", RequestClass.DECODE, source=source,
+                    rid=sess.req.rid)):
             try:
                 self.engines[dest].import_session(sess)
                 return dest
@@ -398,6 +464,8 @@ class FleetGateway:
                 self._per_replica[dest] += 1
                 moved += 1
         self._migrations += moved
+        if moved and self._m_migrations is not None:
+            self._m_migrations.inc(moved)
         return moved
 
     # -- region-tier export hooks ------------------------------------------
@@ -534,6 +602,8 @@ class FleetGateway:
                 if len(self._ttfts) >= self.TTFT_CAP:    # evict oldest
                     self._ttfts.pop(next(iter(self._ttfts)))
                 self._ttfts[t.req.rid] = t.ttft
+                if self._h_ttft is not None:
+                    self._h_ttft.observe(t.ttft)
                 # the learning samples span prefill-start -> first token
                 # (the engine stamps t_admit), NOT dispatch -> first
                 # token: the engine-queue wait is what QueueAware's
@@ -549,6 +619,8 @@ class FleetGateway:
                                            req_class=t.req_class)
             if t.req.done and t.ttft is not None:
                 self._served += 1       # finished: stop tracking it
+                if self._m_served is not None:
+                    self._m_served.inc()
             else:
                 in_flight.append(t)
         self.tracked = in_flight
@@ -566,6 +638,13 @@ class FleetGateway:
 
     def stats(self) -> dict:
         s = self.router.stats()
+        # unified cross-scale counters (repro.obs.CANONICAL_STATS) —
+        # "served"/"migrations" remain as legacy aliases
+        s["requests_served"] = self._served
+        s["requests_shed"] = self.shed_total
+        s["sessions_migrated"] = self._migrations
+        s["queue_depth"] = (len(self.held)
+                            + sum(e.pending() for e in self.engines))
         s["served"] = self._served
         s["migrations"] = self._migrations
         s["shed_requests"] = [r.rid for r in self.shed]

@@ -21,6 +21,7 @@ import dataclasses
 from typing import Sequence
 
 from ..core.tracetable import CostModel, Latency, MigrationCost, QueueAware
+from ..obs import NULL_TRACER
 from ..serve.scheduler import RequestClass, classify_request
 from .admission import Admission, AdmissionController, SLOPolicy
 from .fleet_ptt import FleetPTT
@@ -42,14 +43,18 @@ class FleetRouter:
     def __init__(self, num_replicas: int, slo: SLOPolicy | None = None,
                  interference: InterferenceConfig | None = None,
                  probe_every: int = 4, cost: CostModel | None = None,
-                 migration: MigrationCost | None = None):
+                 migration: MigrationCost | None = None,
+                 attribution=None):
         """``cost``: the objective for critical (global) searches — default
         :class:`QueueAware` (learned per-replica service rates once
         ``record_service`` samples arrive, count inflation until then).
         ``migration``: when given, sticky searches charge this KV-transfer
         estimate on top of the latency objective, so a decode-heavy
         follow-up only leaves its affinity replica when the win pays for
-        the cache move."""
+        the cache move.  ``attribution``: an optional
+        :class:`~repro.obs.DecisionLog` — every PTT search this router (or
+        its gateway, via :meth:`attr_hook`) performs lands there with the
+        per-candidate cost breakdown and a table-row snapshot."""
         self.fleet = FleetPTT(num_replicas, num_classes=len(RequestClass))
         self.detector = InterferenceDetector(
             num_replicas, interference or InterferenceConfig())
@@ -73,6 +78,69 @@ class FleetRouter:
         # decay target is anchor x drift (decaying the live row by the
         # ratio every sample would compound without bound)
         self._svc_anchor: dict[int, float] = {}
+        self.attribution = attribution
+        self.tracer = NULL_TRACER
+        self.metrics = None
+        self.obs_name = "fleet"
+
+    # -- observability -----------------------------------------------------
+    def attach_obs(self, tracer=None, metrics=None,
+                   name: str | None = None) -> None:
+        """Attach a :class:`~repro.obs.SpanTracer` and/or
+        :class:`~repro.obs.MetricRegistry`.  Detector state flips
+        (quarantine/readmit) become instant events on the
+        ``{name}/detector`` track and tick
+        ``fleet_quarantine_transitions_total``."""
+        if name is not None:
+            self.obs_name = name
+        if tracer is not None:
+            self.tracer = tracer
+        if metrics is not None:
+            self.metrics = metrics
+
+    def _note_flip(self, flip: str, replica: int) -> None:
+        if self.tracer.enabled:
+            self.tracer.instant(
+                flip, trace=f"{self.obs_name}/detector",
+                track=f"{self.obs_name}/detector", replica=replica,
+                drift=round(self.detector.drift(replica), 3))
+        if self.metrics is not None:
+            self.metrics.counter(
+                "fleet_quarantine_transitions_total",
+                "InterferenceDetector quarantine/readmit state flips",
+                fleet=self.obs_name, event=flip).inc()
+
+    def _rows_fn(self, c: RequestClass):
+        """A ``rows_fn`` for :meth:`~repro.obs.DecisionLog.hook`: per
+        candidate replica, the evidence the costs were computed from —
+        TTFT/TPOT EMA rows (+ trained mask), learned service rate, live
+        drift ratio, quarantine state."""
+        def rows(sa) -> dict:
+            out = {}
+            for cand in sa.candidates:
+                r = cand.item
+                out[r] = {
+                    "ttft": self.fleet.value(int(c), r, FleetPTT.TTFT),
+                    "tpot": self.fleet.value(int(RequestClass.DECODE), r,
+                                             FleetPTT.TPOT),
+                    "trained": self.fleet.trained(int(c), r, FleetPTT.TTFT),
+                    "service": self.fleet.service_time(r),
+                    "drift": round(self.detector.drift(r), 4),
+                    "quarantined": r in self.detector.quarantined,
+                }
+            return out
+        return rows
+
+    def attr_hook(self, kind: str, req_class: RequestClass, **meta):
+        """An ``attribution=`` callable for one :class:`FleetPTT` search
+        recording into this router's :class:`~repro.obs.DecisionLog` (None
+        when no log is attached) — the gateway uses this for its migration
+        placement searches so they carry the same row snapshots as routing
+        decisions."""
+        if self.attribution is None:
+            return None
+        return self.attribution.hook(kind, self._rows_fn(req_class),
+                                     req_class=req_class.name, **meta)
 
     # -- routing -----------------------------------------------------------
     def route(self, prompt_len: int, max_new: int,
@@ -125,6 +193,16 @@ class FleetRouter:
                                      action=Admission.ADMIT,
                                      predicted_ttft=0.0, probe=True)
 
+        # decision attribution: one record per search, annotated after the
+        # fact with the final (post-overflow, post-admission) outcome —
+        # recbox holds the record the hook appended so we can reach it
+        rec = None
+        attrib = None
+        if self.attribution is not None:
+            base = self.attr_hook("route", c, affinity=affinity)
+            recbox: list = []
+            attrib = lambda sa: recbox.append(base(sa))  # noqa: E731
+
         pred_overflow = None     # set when overflow picks a quarantined
                                  # replica (drift-scaled prediction)
         if c == RequestClass.DECODE:
@@ -137,21 +215,26 @@ class FleetRouter:
                                              healthy=healthy or None,
                                              backlog=backlog,
                                              tokens=prompt_len,
-                                             cost=self.sticky_cost)
+                                             cost=self.sticky_cost,
+                                             attribution=attrib)
             else:
                 r = self.fleet.global_search(c, metric=FleetPTT.TPOT,
                                              healthy=healthy or None,
                                              backlog=backlog,
-                                             cost=self.cost)
+                                             cost=self.cost,
+                                             attribution=attrib)
         else:
             # all replicas quarantined: degrade gracefully, route anyway
             r = self.fleet.global_search(c, metric=FleetPTT.TTFT,
                                          healthy=healthy or None,
                                          backlog=backlog, tokens=prompt_len,
-                                         cost=self.cost)
+                                         cost=self.cost,
+                                         attribution=attrib)
             if quarantined and backlog is not None:
                 r, pred_overflow = self._overflow(c, r, quarantined, backlog,
                                                   prompt_len)
+        if attrib is not None and recbox:
+            rec = recbox[-1]
         if pred_overflow is not None:
             pred = pred_overflow        # drift-scaled: the raw row would
                                         # understate a straggler's TTFT to
@@ -168,6 +251,10 @@ class FleetRouter:
             pred_tpot *= max(self.detector.drift(r), 1.0)
         action = (self.admission.evaluate(c, pred, pred_tpot) if requeue
                   else self.admission.decide(c, pred, pred_tpot))
+        if rec is not None:
+            rec.meta.update(replica=r, action=action.name,
+                            overflow=pred_overflow is not None,
+                            predicted_ttft=pred)
         return RouteDecision(
             replica=r if action is Admission.ADMIT else None,
             req_class=c, action=action, predicted_ttft=pred,
@@ -239,7 +326,9 @@ class FleetRouter:
         drift (the old read-time hack)."""
         self.fleet.update(int(RequestClass.DECODE), replica, FleetPTT.TPOT,
                           latency)
-        self.detector.observe(replica, latency)
+        flip = self.detector.observe(replica, latency)
+        if flip is not None:
+            self._note_flip(flip, replica)
         if replica in self.detector.quarantined:
             self._decay_quarantined_service(replica)
         else:

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from ..models import Model
+from ..obs import NULL_TRACER
 from .scheduler import ElasticServeScheduler
 
 
@@ -74,6 +75,11 @@ class Session:
     pos: int
     cur_token: int
     cache: dict
+    trace: dict | None = None    # trace context ({"trace_id": ...}) — the
+                                 # request's causal identity rides the wire
+                                 # so the importing engine's tracer can
+                                 # continue the same timeline (wire v2's
+                                 # optional "trace" key; None on v1 decode)
 
 
 class ServeEngine:
@@ -115,6 +121,64 @@ class ServeEngine:
         # last_step_latency untouched.
         self.on_step_latency = None
         self.last_step_latency = 0.0
+        # observability (attach_obs): NULL_TRACER/no registry by default —
+        # the decode hot path pays one `tracer.enabled` check per chunk
+        self.tracer = NULL_TRACER
+        self.metrics = None
+        self.obs_name = "engine"
+        self._served = 0         # requests finished on this engine
+        self._exports = 0        # sessions migrated out
+        self._imports = 0        # sessions migrated in
+        self._m_served = self._m_tokens = None
+        self._m_exports = self._m_imports = None
+        self._h_prefill = self._h_step = None
+
+    # -- observability -----------------------------------------------------
+    def attach_obs(self, tracer=None, metrics=None,
+                   name: str | None = None) -> None:
+        """Attach a :class:`~repro.obs.SpanTracer` and/or
+        :class:`~repro.obs.MetricRegistry`.  ``name`` labels this engine's
+        series and is its span track.  Metric children are resolved once
+        here so the decode loop pays a float add, not a registry lookup."""
+        if name is not None:
+            self.obs_name = name
+        if tracer is not None:
+            self.tracer = tracer
+        if metrics is not None:
+            self.metrics = metrics
+            e = self.obs_name
+            self._m_served = metrics.counter(
+                "serve_requests_served_total",
+                "Requests finished on this engine", engine=e)
+            self._m_tokens = metrics.counter(
+                "serve_decode_tokens_total",
+                "Tokens decoded (batch slots x chunk)", engine=e)
+            self._m_exports = metrics.counter(
+                "serve_sessions_exported_total",
+                "Live sessions migrated out", engine=e)
+            self._m_imports = metrics.counter(
+                "serve_sessions_imported_total",
+                "Live sessions migrated in", engine=e)
+            self._h_prefill = metrics.histogram(
+                "serve_prefill_seconds", "Per-request prefill wall time",
+                engine=e)
+            self._h_step = metrics.histogram(
+                "serve_decode_step_seconds",
+                "Decode latency per token (elapsed / chunk)", engine=e)
+
+    def stats(self) -> dict:
+        """Counter facade with the unified cross-scale key names
+        (:data:`repro.obs.CANONICAL_STATS`) plus engine-local detail."""
+        return {
+            "requests_served": self._served,
+            "requests_shed": 0,          # engines never shed; the router does
+            "sessions_migrated": self._exports + self._imports,
+            "queue_depth": self.pending(),
+            "sessions_exported": self._exports,
+            "sessions_imported": self._imports,
+            "active": self.active_count(),
+            "utilization": self.utilization(),
+        }
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -158,12 +222,19 @@ class ServeEngine:
                 batch[name] = jnp.asarray(val)[None]
             logits, cache = self.model.prefill(self.params, batch)
             next_tok = int(jnp.argmax(logits[0, -1]))
-            self.scheduler.record(d, time.perf_counter() - t0,
-                                  time.perf_counter())
+            prefill_dur = time.perf_counter() - t0
+            self.scheduler.record(d, prefill_dur, time.perf_counter())
             req.out_tokens.append(next_tok)
             req.t_first = time.perf_counter()
+            if self.tracer.enabled:
+                self.tracer.complete(
+                    "prefill", self.tracer.trace_for(req.rid), self.obs_name,
+                    ts=t0, dur=prefill_dur, prompt_len=len(req.prompt))
+            if self._h_prefill is not None:
+                self._h_prefill.observe(prefill_dur)
             if len(req.out_tokens) >= req.max_new:
                 req.done = True          # finished at prefill: no slot used
+                self._finish(req)
                 continue
             slot = slots.pop(0)
             self._ensure_cache()
@@ -172,6 +243,15 @@ class ServeEngine:
             self.pos[slot] = len(req.prompt)
             self.cur_token[slot, 0] = next_tok
             self._dev_dirty = True
+
+    def _finish(self, req: Request) -> None:
+        """Bookkeep one finished request (counter + optional instant)."""
+        self._served += 1
+        if self._m_served is not None:
+            self._m_served.inc()
+        if self.tracer.enabled:
+            self.tracer.instant("finish", self.tracer.trace_for(req.rid),
+                                self.obs_name, tokens=len(req.out_tokens))
 
     # -- session migration -------------------------------------------------
     def export_session(self, rid: int) -> Session:
@@ -188,6 +268,14 @@ class ServeEngine:
                 self.pos[slot] = 0
                 self.cur_token[slot, 0] = 0
                 self._dev_dirty = True
+                self._exports += 1
+                if self._m_exports is not None:
+                    self._m_exports.inc()
+                if self.tracer.enabled:
+                    tid = self.tracer.trace_for(rid)
+                    sess.trace = {"trace_id": tid}
+                    self.tracer.instant("migrate-out", tid, self.obs_name,
+                                        pos=pos)
                 return sess
         raise KeyError(f"rid {rid} is not active on this engine")
 
@@ -215,6 +303,17 @@ class ServeEngine:
             raise ValueError(
                 f"session at pos {sess.pos} with {remaining} tokens to go "
                 f"would truncate at max_seq {self.max_seq}")
+        self._imports += 1
+        if self._m_imports is not None:
+            self._m_imports.inc()
+        if sess.trace is not None:
+            # continue the request's original timeline: the carried trace
+            # id wins over anything this tracer would mint for the rid
+            self.tracer.adopt(sess.req.rid, sess.trace["trace_id"])
+        if self.tracer.enabled:
+            self.tracer.instant("migrate-in",
+                                self.tracer.trace_for(sess.req.rid),
+                                self.obs_name, pos=sess.pos)
         self.sessions_in.append(sess)
 
     def export_session_wire(self, rid: int) -> bytes:
@@ -305,6 +404,15 @@ class ServeEngine:
             toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))[:, None]
         decode_elapsed = time.perf_counter() - t0
         self.scheduler.record(d, decode_elapsed, time.perf_counter())
+        if self.tracer.enabled:
+            # one span per active request per chunk, before the harvest
+            # loop nulls finished slots — every request's timeline shows
+            # the chunks that decoded it
+            for req in self.active:
+                if req is not None:
+                    self.tracer.complete(
+                        "decode-chunk", self.tracer.trace_for(req.rid),
+                        self.obs_name, ts=t0, dur=decode_elapsed, tokens=k)
         for i, req in enumerate(self.active):
             if req is None:
                 continue
@@ -319,6 +427,7 @@ class ServeEngine:
                     self.pos[i] = 0
                     self.cur_token[i, 0] = 0
                     self._dev_dirty = True
+                    self._finish(req)
                     break
         if self.fused and any(r is None for r in self.active):
             # keep idle slots' device pos pinned at 0: the fused scan
@@ -330,6 +439,9 @@ class ServeEngine:
             self._dev_dirty = True
         per_token = decode_elapsed / k
         self.last_step_latency = per_token
+        if self._h_step is not None:
+            self._h_step.observe(per_token)
+            self._m_tokens.inc(n_active * k)
         if self.on_step_latency is not None:
             self.on_step_latency(per_token)
         return n_active

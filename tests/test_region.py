@@ -18,8 +18,8 @@ from repro.core.tracetable import (Candidate, MigrationCost, QueueAware,
                                    SearchContext, TraceTable, WanCost)
 from repro.models import get_model
 from repro.region import (LoopbackTransport, RegionGateway, RegionRouter,
-                          WIRE_VERSION, WireFormatError, decode_session,
-                          encode_session, wire_header)
+                          WIRE_COMPAT, WIRE_VERSION, WireFormatError,
+                          decode_session, encode_session, wire_header)
 from repro.router import FleetGateway
 from repro.serve import Request, ServeEngine, Session
 
@@ -91,10 +91,11 @@ def test_wire_rejects_corrupt_and_foreign_payloads():
     # foreign bytes
     with pytest.raises(WireFormatError, match="magic"):
         decode_session(b"XXXX" + data[4:])
-    # any mismatched format version must refuse, not misparse — the CRC
-    # covers only the body, so both a future version and a corrupted
-    # version byte (1 -> 0) land here
+    # any version outside the compat set must refuse, not misparse — the
+    # CRC covers only the body, so both a future version and a corrupted
+    # version byte (2 -> 0) land here
     for v in (WIRE_VERSION + 1, 0):
+        assert v not in WIRE_COMPAT
         fut = bytearray(data)
         fut[4] = v
         with pytest.raises(WireFormatError, match="version"):
@@ -106,6 +107,33 @@ def test_wire_rejects_corrupt_and_foreign_payloads():
         decode_session(bytes(unk))
     with pytest.raises(WireFormatError):
         encode_session(_synthetic_session(), codec="lz4")
+
+
+def test_wire_v1_payload_still_decodes():
+    """Backward compat: v2 only added an optional payload key, so a v1
+    payload — same layout, version byte 1, no "trace" key — must decode
+    unchanged (trace=None), while versions outside WIRE_COMPAT raise."""
+    assert WIRE_VERSION == 2 and WIRE_COMPAT == frozenset({1, 2})
+    sess = _synthetic_session()
+    assert sess.trace is None
+    data = bytearray(encode_session(sess))      # v2 writer, no trace key:
+    data[4] = 1                                 # byte-identical to a v1
+    out = decode_session(bytes(data))           # writer's output
+    assert wire_header(bytes(data))["version"] == 1
+    assert out.pos == sess.pos and out.trace is None
+    assert out.req.out_tokens == sess.req.out_tokens
+    for k in sess.cache:
+        assert np.array_equal(out.cache[k], sess.cache[k])
+
+
+def test_wire_carries_trace_context():
+    """v2's optional trace field: present -> round-trips verbatim; the
+    migrated request's causal identity survives the byte boundary."""
+    sess = _synthetic_session()
+    sess.trace = {"trace_id": "fleetA/r7"}
+    out = decode_session(encode_session(sess))
+    assert out.trace == {"trace_id": "fleetA/r7"}
+    assert wire_header(encode_session(sess))["version"] == WIRE_VERSION
 
 
 def test_engine_wire_round_trip_token_identity():
