@@ -12,12 +12,13 @@ import sys
 import time
 import traceback
 
-from . import (fig5_heatmap, fig6_kernels, fig7_speedup, fig8_interference,
-               fig9_vgg_scaling, fig10_widths, fleet_routing, kernel_bench,
-               obs_overhead, pod_serving, pod_straggler, region_routing,
-               roofline, serve_decode)
+from . import (disagg_serving, fig5_heatmap, fig6_kernels, fig7_speedup,
+               fig8_interference, fig9_vgg_scaling, fig10_widths,
+               fleet_routing, kernel_bench, obs_overhead, pod_serving,
+               pod_straggler, region_routing, roofline, serve_decode)
 
 MODULES = (
+    ("disagg_serving", disagg_serving),
     ("fig5_heatmap", fig5_heatmap),
     ("fig6_kernels", fig6_kernels),
     ("fig7_speedup", fig7_speedup),

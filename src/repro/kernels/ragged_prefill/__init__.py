@@ -1,0 +1,3 @@
+from .ops import force_pallas, ragged_prefill_attention
+
+__all__ = ["ragged_prefill_attention", "force_pallas"]

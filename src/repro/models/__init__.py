@@ -57,6 +57,14 @@ class Model:
     cache_seq_axes: Callable
     extract_session: Callable     # (cache, slot, pos) -> session dict (numpy)
     insert_session: Callable      # (cache, slot, session) -> new cache
+    prefill_chunk: Callable | None = None
+                                  # (params, tokens (B,T), cache, start (B,),
+                                  # qlen (B,)) -> (logits (B,1,V), cache)
+                                  # chunked prefill step with the cache
+                                  # DONATED (updated in place between
+                                  # chunks); None for families whose prefill
+                                  # is not chunkable (they prefill a prompt
+                                  # as one whole-sequence "chunk")
 
 
 _FAMILY = {
@@ -93,6 +101,21 @@ def _fused_decode(cfg: ModelConfig, mod) -> Callable:
     return jax.jit(fused, static_argnums=4, donate_argnums=3)
 
 
+def _chunked_prefill(cfg: ModelConfig, mod) -> Callable | None:
+    """Jitted chunked-prefill step with the growing cache donated between
+    chunks, for families whose prefill is expressible as repeated
+    fixed-size chunk consumption (attention caches written at per-slot
+    offsets).  The audio family shares the transformer module but prefills
+    from frames, not token ids, so it keeps the whole-sequence path."""
+    if not hasattr(mod, "prefill_chunk") or cfg.family == "audio":
+        return None
+
+    def chunk(params, tokens, cache, start, qlen):
+        return mod.prefill_chunk(cfg, params, tokens, cache, start, qlen)
+
+    return jax.jit(chunk, donate_argnums=2)
+
+
 def get_model(cfg: ModelConfig) -> Model:
     mod = _FAMILY[cfg.family]
     bind = lambda f: (lambda *a, **kw: f(cfg, *a, **kw))
@@ -114,4 +137,5 @@ def get_model(cfg: ModelConfig) -> Model:
                  cache_logical_axes=bind(mod.cache_logical_axes),
                  cache_seq_axes=bind(mod.cache_seq_axes),
                  extract_session=extract_session,
-                 insert_session=insert_session)
+                 insert_session=insert_session,
+                 prefill_chunk=_chunked_prefill(cfg, mod))

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..distributed.sharding import constrain
 from ..kernels.ragged_decode import ragged_decode_attention
+from ..kernels.ragged_prefill import ragged_prefill_attention
 
 Params = Any   # nested dict pytree
 Specs = Any
@@ -310,6 +311,29 @@ def decode_attention(cfg: ModelConfig, q: jax.Array, k_cache: jax.Array,
     return out.reshape(B, 1, Hq * hd).astype(q.dtype)
 
 
+def prefill_chunk_attention(cfg: ModelConfig, q: jax.Array,
+                            k_cache: jax.Array, v_cache: jax.Array,
+                            start: jax.Array, qlen: jax.Array) -> jax.Array:
+    """Chunk-of-queries attention against a ragged batch cache (the chunked
+    prefill analogue of :func:`decode_attention`).
+
+    q: (B, T, Hq, hd) — chunk token ``i`` of slot ``b`` sits at absolute
+    position ``start[b] + i``; caches: (B, Smax, Hkv, hd), already holding
+    the chunk's own K/V rows; ``qlen``: live rows per slot (padded rows
+    return zeros).  The score/softmax math lives in
+    :mod:`repro.kernels.ragged_prefill` behind the same A/B guard as decode
+    attention: the Pallas kernel (TPU, or interpret mode under
+    ``ragged_prefill.force_pallas``) streams K/V blocks only up to each
+    slot's ``start + qlen - 1`` horizon; elsewhere the jnp reference keeps
+    the single-device path byte-stable.
+    """
+    B, T, Hq, _ = q.shape
+    k_cache = constrain(k_cache, "batch", "seq_mp", None, None)
+    v_cache = constrain(v_cache, "batch", "seq_mp", None, None)
+    out = ragged_prefill_attention(q, k_cache, v_cache, start, qlen)
+    return out.reshape(B, T, Hq * q.shape[-1]).astype(q.dtype)
+
+
 @dataclasses.dataclass
 class AttnOut:
     x: jax.Array
@@ -341,6 +365,38 @@ def attention_decode_inplace(cfg: ModelConfig, p: Params, x: jax.Array,
     kc = jax.lax.dynamic_index_in_dim(kfull, layer_idx, 0, keepdims=False)
     vc = jax.lax.dynamic_index_in_dim(vfull, layer_idx, 0, keepdims=False)
     out = decode_attention(cfg, q, kc.astype(cdt), vc.astype(cdt), positions)
+    out = out @ p["wo"].astype(cdt)
+    return constrain(out, "batch", None, None), kfull, vfull
+
+
+def attention_prefill_chunk_inplace(cfg: ModelConfig, p: Params,
+                                    x: jax.Array, kfull: jax.Array,
+                                    vfull: jax.Array, layer_idx,
+                                    start: jax.Array, qlen: jax.Array,
+                                    positions: jax.Array,
+                                    rope: bool = True):
+    """Chunk-of-tokens attention updating the STACKED (L, B, Smax, Hkv, hd)
+    caches in place — the chunked-prefill analogue of
+    :func:`attention_decode_inplace`.  ``x``: (B, T, D) chunk activations;
+    ``positions``: (B, T) absolute positions (``start[:, None] +
+    arange(T)``); padded rows (``i >= qlen[b]``) scatter out of bounds and
+    are dropped, so they never land in the cache."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(cdt)
+    B, T, _ = x.shape
+    q, k, v = _qkv(cfg, p, x, x, positions, positions, rope)
+    Smax = kfull.shape[2]
+    batch_ix = jnp.arange(B)[:, None]
+    live = jnp.arange(T)[None, :] < qlen[:, None]
+    safe_pos = jnp.where(live, positions, Smax)       # OOB rows are dropped
+    kfull = kfull.at[layer_idx, batch_ix, safe_pos].set(
+        k.astype(kfull.dtype), mode="drop")
+    vfull = vfull.at[layer_idx, batch_ix, safe_pos].set(
+        v.astype(vfull.dtype), mode="drop")
+    kc = jax.lax.dynamic_index_in_dim(kfull, layer_idx, 0, keepdims=False)
+    vc = jax.lax.dynamic_index_in_dim(vfull, layer_idx, 0, keepdims=False)
+    out = prefill_chunk_attention(cfg, q, kc.astype(cdt), vc.astype(cdt),
+                                  start, qlen)
     out = out @ p["wo"].astype(cdt)
     return constrain(out, "batch", None, None), kfull, vfull
 

@@ -71,6 +71,17 @@ def _block_prefill(cfg: ModelConfig, lp, x, positions):
     return constrain(x, "batch", "seq_sp", None), (a.k, a.v)
 
 
+def _block_prefill_chunk(cfg: ModelConfig, lp, x, kfull, vfull, layer_idx,
+                         start, qlen, positions):
+    h = L.apply_norm(lp["ln1"], x, cfg.norm)
+    out, kfull, vfull = L.attention_prefill_chunk_inplace(
+        cfg, lp["attn"], h, kfull, vfull, layer_idx, start, qlen, positions)
+    x = x + out
+    h = L.apply_norm(lp["ln2"], x, cfg.norm)
+    x = x + L.mlp_apply(cfg, lp["mlp"], h)
+    return x, kfull, vfull
+
+
 def _block_decode(cfg: ModelConfig, lp, x, kfull, vfull, layer_idx, pos):
     h = L.apply_norm(lp["ln1"], x, cfg.norm)
     out, kfull, vfull = L.attention_decode_inplace(
@@ -123,6 +134,38 @@ def prefill(cfg: ModelConfig, p, batch):
     x = L.apply_norm(p["ln_f"], x, cfg.norm)
     logits = L.lm_head(cfg, p["tok"], x[:, -1:])
     return logits, {"k": ks, "v": vs}        # (L, B, S, Hkv, hd)
+
+
+def prefill_chunk(cfg: ModelConfig, p, tokens, cache, start, qlen):
+    """Consume one fixed-size prompt chunk against growing (L, B, Smax,
+    Hkv, hd) caches — the chunked-prefill admission path.  ``tokens``:
+    (B, T) chunk ids (rows past ``qlen[b]`` are padding); ``start``: (B,)
+    absolute position of each slot's first chunk token; ``qlen``: (B,) live
+    tokens.  The stacked caches ride the scan carry and take a T-row
+    dynamic scatter per layer, so the jit can donate them between chunks
+    (``Model.prefill_chunk``).  Returns (logits at each slot's last live
+    token (B, 1, V), cache) — the logits are only meaningful once the
+    chunk covering the prompt's final token has been consumed."""
+    x = L.embed_tokens(cfg, p["tok"], tokens)
+    B, T = tokens.shape
+    start = jnp.asarray(start, jnp.int32).reshape(-1)
+    qlen = jnp.asarray(qlen, jnp.int32).reshape(-1)
+    positions = start[:, None] + jnp.arange(T)[None, :]
+
+    def body(carry, xs):
+        x, kfull, vfull = carry
+        lp, i = xs
+        x, kfull, vfull = _block_prefill_chunk(cfg, lp, x, kfull, vfull, i,
+                                               start, qlen, positions)
+        return (x, kfull, vfull), None
+
+    (x, ks, vs), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (p["layers"], jnp.arange(cfg.n_layers)))
+    x = L.apply_norm(p["ln_f"], x, cfg.norm)
+    last = jnp.maximum(qlen - 1, 0)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    return L.lm_head(cfg, p["tok"], x_last), {"k": ks, "v": vs}
 
 
 def decode(cfg: ModelConfig, p, token, pos, cache):

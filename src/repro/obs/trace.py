@@ -72,38 +72,71 @@ class SpanTracer:
     tracers in different processes never collide; ``clock`` must be
     monotonic (defaults to ``time.perf_counter``); ``cap`` bounds the
     event log (oldest evicted) so a long-lived server cannot leak.
+
+    ``sample_rate`` traces 1-in-N requests: :meth:`trace_for` returns
+    ``None`` for sampled-out rids (the decision is sticky per rid), and
+    request-bound recording calls whose ``trace`` is ``None`` are dropped
+    — instrumented code can keep passing ``trace_for``'s result straight
+    through without its own guard.  Two invariants make sampling safe at
+    production rates: (a) ``sample_rate=1`` (the default) is
+    behavior-identical to the unsampled tracer — ``trace=None`` events
+    keep falling back to the tracer-level timeline; (b) :meth:`adopt`
+    force-binds regardless of the local sampling decision, so a sampled
+    request that migrates in from another host keeps its full
+    cross-boundary timeline — the origin's sampling verdict travels with
+    the session, never re-rolled downstream.
     """
 
     enabled = True
 
     def __init__(self, name: str = "t0",
                  clock: Callable[[], float] = time.perf_counter,
-                 cap: int = 200_000):
+                 cap: int = 200_000, sample_rate: int = 1):
+        if sample_rate < 1:
+            raise ValueError(f"sample_rate must be >= 1, got {sample_rate}")
         self.name = name
         self.clock = clock
+        self.sample_rate = int(sample_rate)
         self.events: deque[dict] = deque(maxlen=cap)
-        self._bind: dict = {}            # rid -> trace id
+        self._bind: dict = {}            # rid -> trace id (None: sampled out)
 
     # -- trace identity ----------------------------------------------------
-    def trace_for(self, rid) -> str:
-        """The trace id bound to ``rid`` (minted on first touch).  Every
-        scale calls this instead of formatting ids itself, so an adopted
-        binding (a migrated-in session) wins over re-derivation."""
-        tid = self._bind.get(rid)
-        if tid is None:
-            tid = self._bind[rid] = f"{self.name}/r{rid}"
+    def trace_for(self, rid) -> str | None:
+        """The trace id bound to ``rid`` (minted on first touch), or
+        ``None`` when sampling dropped this rid.  Every scale calls this
+        instead of formatting ids itself, so an adopted binding (a
+        migrated-in session) wins over re-derivation — including over a
+        local sampled-out verdict."""
+        if rid in self._bind:
+            return self._bind[rid]
+        if self.sample_rate > 1:
+            key = rid if isinstance(rid, int) else hash(rid)
+            if key % self.sample_rate != 0:
+                self._bind[rid] = None   # sticky: every later touch agrees
+                return None
+        tid = self._bind[rid] = f"{self.name}/r{rid}"
         return tid
 
     def adopt(self, rid, trace_id: str) -> None:
         """Bind ``rid`` to a trace id carried in from another tracer (the
         session wire format's trace-context field): subsequent events on
-        this host continue the request's original timeline."""
+        this host continue the request's original timeline.  Force-binds
+        over any local sampling verdict — the wire only carries a trace
+        context for requests the origin sampled IN, and dropping their
+        tail here would truncate exactly the timelines sampling kept."""
         self._bind[rid] = trace_id
 
     # -- recording ---------------------------------------------------------
+    def _dropped(self, trace) -> bool:
+        # a None trace under sampling is a sampled-out request's event;
+        # under sample_rate=1 it is the legacy "tracer-level timeline"
+        return trace is None and self.sample_rate > 1
+
     def instant(self, name: str, trace: str | None = None,
                 track: str | None = None, **args) -> None:
         """A point event (admit/shed/quarantine/...)."""
+        if self._dropped(trace):
+            return
         self.events.append({"name": name, "ph": "i", "ts": self.clock(),
                             "trace": trace or self.name,
                             "track": track or self.name, "args": args})
@@ -113,6 +146,8 @@ class SpanTracer:
                  **args) -> None:
         """A span recorded after the fact (caller measured ``ts``/``dur``
         itself — the engine's decode chunk, a WAN ship)."""
+        if self._dropped(trace):
+            return
         self.events.append({"name": name, "ph": "X", "ts": ts,
                             "dur": max(dur, 0.0),
                             "trace": trace or self.name,
@@ -122,6 +157,9 @@ class SpanTracer:
     def span(self, name: str, trace: str | None = None,
              track: str | None = None, **args):
         """Context-manager span: records one complete event on exit."""
+        if self._dropped(trace):
+            yield
+            return
         t0 = self.clock()
         try:
             yield

@@ -161,7 +161,7 @@ class RegionGateway:
         delivered = self.transport.ship(data, src, dst)
         rtt = self.transport.last_rtt_s
         if rtt > 0.0:
-            self.router.record_rtt(src, dst, rtt)
+            self.router.record_rtt(src, dst, rtt, now=self.clock())
         sess = decode_session(delivered)         # the far side's object
         try:
             self.fleets[dst].adopt_session(sess)
@@ -249,9 +249,13 @@ class RegionGateway:
 
     # -- pump --------------------------------------------------------------
     def pump(self) -> int:
-        """One region iteration: drain browned-out fleets, pump every
-        fleet, harvest region-level observations.  Returns sequences
-        still active region-wide."""
+        """One region iteration: age stale RTT rows, drain browned-out
+        fleets, pump every fleet, harvest region-level observations.
+        Returns sequences still active region-wide."""
+        # rows age BEFORE this pump's drain decisions read them: a link
+        # whose last delivery predates a route flap must not price this
+        # pump's WAN moves with its stale RTT
+        self.router.age_links(self.clock())
         self._drain_browned_out()
         active = 0
         for f, gw in enumerate(self.fleets):

@@ -57,20 +57,32 @@ class RegionRouter:
                  bytes_per_token: float = 0.0,
                  migration: MigrationCost | None = None,
                  migrate_ratio: float = 2.0,
+                 rtt_halflife_s: float = 0.0,
                  attribution=None):
         """``egress_per_byte`` x ``bytes_per_token`` is the per-token
         charge for shipping state over a link (0.0 = RTT-only WAN model);
         ``migration`` additionally charges the destination-side cache
-        re-ingest on sticky/drain moves.  ``attribution``: an optional
-        :class:`~repro.obs.DecisionLog` — every placement and drain-rank
-        search lands there with its per-candidate WanCost/QueueAware/...
-        breakdown and a fleet-row snapshot."""
+        re-ingest on sticky/drain moves.  ``rtt_halflife_s`` enables
+        time-based RTT row aging (:meth:`age_links`): a link row that has
+        not seen a delivery for a halflife decays toward the trained-link
+        prior (0.0 = rows never age, the pre-aging behavior).
+        ``attribution``: an optional :class:`~repro.obs.DecisionLog` —
+        every placement and drain-rank search lands there with its
+        per-candidate WanCost/QueueAware/... breakdown and a fleet-row
+        snapshot."""
         if num_fleets < 1:
             raise ValueError("need at least one fleet")
         self.num_fleets = num_fleets
         self.table = FleetPTT(num_fleets, num_classes=len(RequestClass))
         # link-keyed axes: (src fleet, dst fleet) -> EMA'd RTT seconds
         self.links = TraceTable((num_fleets, num_fleets), metrics=("rtt",))
+        self.rtt_halflife_s = float(rtt_halflife_s)
+        # per-link freshness: (src, dst) -> (last-delivery stamp, row value
+        # right after that delivery).  The anchor makes aging idempotent:
+        # each pass recomputes decay from the anchored value, so repeated
+        # age_links() calls at the same `now` agree instead of compounding
+        self._link_fresh: dict[tuple[int, int], tuple[float, float]] = {}
+        self._rtt_decays = 0
         self.wan = WanCost(self.links, egress_per_byte=egress_per_byte,
                            bytes_per_token=bytes_per_token)
         self.migration = migration
@@ -179,10 +191,49 @@ class RegionRouter:
                                         source=source, pos=pos))
 
     # -- feedback ----------------------------------------------------------
-    def record_rtt(self, src: int, dst: int, seconds: float) -> None:
+    def record_rtt(self, src: int, dst: int, seconds: float,
+                   now: float | None = None) -> None:
         """One observed ``src -> dst`` delivery time: trains the link's
-        EMA RTT row (paper §3.2, the key axes naming links)."""
+        EMA RTT row (paper §3.2, the key axes naming links).  ``now``
+        (the caller's clock) stamps the link fresh for :meth:`age_links`
+        — a real delivery always resets the aging anchor."""
         self.links.update((src, dst), seconds)
+        if now is not None:
+            self._link_fresh[(src, dst)] = (
+                now, self.links.value((src, dst), "rtt"))
+
+    def age_links(self, now: float) -> int:
+        """Time-based decay of stale RTT rows toward the trained-link
+        prior.  A WAN route flap changes a link's physical path: the EMA
+        row then describes a path that no longer exists, and — unlike
+        every other row in the system — nothing retrains it until the
+        *next* delivery happens to use that link, which the stale row
+        itself discourages (a self-sealing error).  So rows age on wall
+        time: once a link has gone ``rtt_halflife_s`` without a delivery,
+        its value decays exponentially toward the mean of all trained
+        links (the prior — absent link-specific evidence, the fleet-wide
+        RTT landscape is the best guess), halving the gap each further
+        halflife.  Decay is computed from the (stamp, value) anchor laid
+        down at the last delivery, so the method is idempotent per ``now``
+        and a fresh delivery fully re-anchors the row.  Returns rows
+        decayed this call; a no-op when ``rtt_halflife_s`` is 0."""
+        if self.rtt_halflife_s <= 0.0 or not self._link_fresh:
+            return 0
+        view = self.links.array("rtt")
+        trained = view != 0.0
+        if not trained.any():
+            return 0
+        prior = float(view[trained].mean())
+        aged = 0
+        for key, (stamp, anchor) in self._link_fresh.items():
+            elapsed = now - stamp
+            if elapsed <= self.rtt_halflife_s or view[key] == 0.0:
+                continue
+            alpha = 0.5 ** (elapsed / self.rtt_halflife_s)
+            view[key] = prior + (anchor - prior) * alpha
+            aged += 1
+        self._rtt_decays += aged
+        return aged
 
     def record_ttft(self, fleet: int, req_class: int, ttft: float, *,
                     prompt_len: int) -> None:
@@ -208,4 +259,5 @@ class RegionRouter:
     def stats(self) -> dict:
         return {"browned_out": sorted(self.browned_out),
                 "updates": self.table.updates,
-                "rtt_rows": self.links.array().tolist()}
+                "rtt_rows": self.links.array().tolist(),
+                "rtt_decays": self._rtt_decays}

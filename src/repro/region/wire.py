@@ -41,10 +41,13 @@ WIRE_MAGIC = b"RSES"
 # v1: the original layout.  v2 adds one OPTIONAL payload key, "trace"
 # (the request's trace context — see repro.obs.trace), so v1 payloads
 # decode unchanged under the v2 reader: same header struct, same body
-# layout, the new key simply absent.  Writers always emit the current
-# version; readers accept every version in WIRE_COMPAT.
-WIRE_VERSION = 2
-WIRE_COMPAT = frozenset({1, 2})
+# layout, the new key simply absent.  v3 adds another optional key,
+# "prefilled" (the session left its source mid-prefill with that many
+# prompt tokens consumed — see Session.prefilled), under the same rule:
+# older payloads decode as complete sessions.  Writers always emit the
+# current version; readers accept every version in WIRE_COMPAT.
+WIRE_VERSION = 3
+WIRE_COMPAT = frozenset({1, 2, 3})
 _CODEC_IDS = {"zlib": 0, "zstd": 1}
 _CODEC_NAMES = {v: k for k, v in _CODEC_IDS.items()}
 # magic(4) + version(1) + codec(1) + crc32(4)
@@ -95,6 +98,10 @@ def encode_session(sess: Session, codec: str | None = None) -> bytes:
         # v2's optional trace context: the request's causal identity rides
         # the wire so the importing engine continues the same timeline
         payload["trace"] = sess.trace
+    if sess.prefilled is not None:
+        # v3's optional partial-prefill marker: the importing engine must
+        # resume chunked prefill at this offset, not start decoding
+        payload["prefilled"] = int(sess.prefilled)
     body = compress(msgpack.packb(payload, use_bin_type=True), codec)
     header = _HEADER.pack(WIRE_MAGIC, WIRE_VERSION, _CODEC_IDS[codec],
                           zlib.crc32(body) & 0xFFFFFFFF)
@@ -114,8 +121,9 @@ def wire_header(data: bytes) -> dict:
             f"bad magic {magic!r}: not a session wire payload")
     if version not in WIRE_COMPAT:
         # explicit compat set: the CRC covers only the body, so a corrupted
-        # version byte (e.g. 2 -> 0) must fail HERE, not be decoded under
-        # the wrong layout; v1 is readable (v2 only added an optional key)
+        # version byte (e.g. 3 -> 0) must fail HERE, not be decoded under
+        # the wrong layout; v1/v2 stay readable (v2 and v3 each only added
+        # an optional key)
         raise WireFormatError(
             f"unsupported session wire version {version} "
             f"(this build reads {sorted(WIRE_COMPAT)})")
@@ -154,7 +162,8 @@ def decode_session(data: bytes) -> Session:
                        cur_token=payload["cur_token"],
                        cache={k: _unpack_array(v)
                               for k, v in payload["cache"].items()},
-                       trace=payload.get("trace"))   # absent on v1 payloads
+                       trace=payload.get("trace"),   # absent on v1 payloads
+                       prefilled=payload.get("prefilled"))  # absent pre-v3
     except WireFormatError:
         raise
     except RuntimeError as e:

@@ -63,6 +63,9 @@ class _Tracked:
                              # term doesn't double-count queueing
     probe: bool = False      # pinned to its (quarantined) replica
     ttft: float | None = None
+    t_handoff: float | None = None   # disaggregated: when the prefilled
+                                     # session landed on its decode replica
+    first_decode: float | None = None
 
 
 class FleetGateway:
@@ -95,16 +98,44 @@ class FleetGateway:
         self._ttfts: dict[int, float] = {}
         self._served = 0
         self._migrations = 0
+        self._handoffs = 0
+        # disaggregated TTFT attribution: rid -> {prefill_s, ship_s,
+        # first_decode_s} (capped alongside _ttfts)
+        self._breakdown: dict[int, dict] = {}
         self._per_replica = [0] * len(self.engines)
+        # role topology: each engine declares itself prefill-, decode-, or
+        # both-capable (ServeEngine(role=...)).  An all-"both" fleet is the
+        # monolithic baseline — no restriction is ever applied.
+        self.roles = [getattr(e, "role", "both") for e in self.engines]
+        self._prefill_ok = [i for i, ro in enumerate(self.roles)
+                            if ro in ("prefill", "both")]
+        self._decode_ok = [i for i, ro in enumerate(self.roles)
+                           if ro in ("decode", "both")]
+        if not self._prefill_ok or not self._decode_ok:
+            raise ValueError(
+                f"fleet roles {self.roles} leave no "
+                f"{'prefill' if not self._prefill_ok else 'decode'}-capable "
+                f"replica")
         for i, e in enumerate(self.engines):
             e.on_step_latency = (
                 lambda dt, _r=i: self.router.record_step(_r, dt))
+            # chunked-prefill wall time flows to its OWN router signal —
+            # never record_step, so prompt chunks can't trip the
+            # interference detector
+            e.on_prefill_latency = (
+                lambda dt, _r=i: self.router.record_prefill_chunk(_r, dt))
+            if self.roles[i] == "prefill":
+                # prefill-specialized: the engine hands every freshly
+                # prefilled session to the gateway instead of decoding it
+                e.on_prefill_complete = (
+                    lambda sess, _r=i: self._handoff(sess, _r))
         # observability (attach_obs): null tracer / no registry by default
         self.tracer = NULL_TRACER
         self.metrics = None
         self.obs_name = "fleet"
         self._m_served = self._m_shed = self._m_migrations = None
         self._h_ttft = self._h_queue_wait = None
+        self._m_handoffs = self._h_handoff = self._h_handoff_bytes = None
 
     # -- observability -----------------------------------------------------
     def attach_obs(self, tracer=None, metrics=None,
@@ -137,6 +168,15 @@ class FleetGateway:
             self._h_queue_wait = metrics.histogram(
                 "fleet_queue_wait_seconds",
                 "Gateway arrival -> engine dispatch wait", fleet=g)
+            self._m_handoffs = metrics.counter(
+                "fleet_prefill_handoffs_total",
+                "Prefilled sessions shipped to decode replicas", fleet=g)
+            self._h_handoff = metrics.histogram(
+                "fleet_handoff_seconds",
+                "Prefill->decode KV session ship wall time", fleet=g)
+            self._h_handoff_bytes = metrics.histogram(
+                "fleet_handoff_bytes",
+                "Encoded session payload size at handoff", fleet=g)
         self.router.attach_obs(tracer, metrics, name=self.obs_name)
         for i, e in enumerate(self.engines):
             t = tracer if e.tracer is NULL_TRACER else None
@@ -171,6 +211,22 @@ class FleetGateway:
             add(int(classify_request(len(req.prompt), req.max_new)))
         return counts
 
+    def prefill_capable(self) -> list[int]:
+        """Replicas that can admit fresh requests (role prefill/both)."""
+        return list(self._prefill_ok)
+
+    def decode_capable(self) -> list[int]:
+        """Replicas that can host decode sessions (role decode/both) — the
+        region tier checks this before shipping a session here."""
+        return list(self._decode_ok)
+
+    def _route_allowed(self) -> list[int] | None:
+        """The ``allowed=`` restriction for fresh-request routing: None in
+        an all-"both" fleet (monolithic — no restriction, no behavior
+        change), the prefill-capable subset otherwise."""
+        return (None if len(self._prefill_ok) == len(self.engines)
+                else list(self._prefill_ok))
+
     def submit(self, req: Request,
                affinity: int | None = None) -> RouteDecision:
         """Route one request.  The returned decision reflects the request's
@@ -178,7 +234,8 @@ class FleetGateway:
         request (this one waits in its place) is reported as QUEUE."""
         t_arrival = self.clock()
         d = self.router.route(len(req.prompt), req.max_new,
-                              affinity=affinity, backlog=self.backlog())
+                              affinity=affinity, backlog=self.backlog(),
+                              allowed=self._route_allowed())
         if d.action is Admission.ADMIT:
             self._dispatch(req, d, t_arrival)
         elif d.action is Admission.QUEUE:
@@ -278,7 +335,8 @@ class FleetGateway:
             req, affinity, tries, t_arrival = self.held.popleft()
             d = self.router.route(len(req.prompt), req.max_new,
                                   affinity=affinity, backlog=self.backlog(),
-                                  requeue=True)
+                                  requeue=True,
+                                  allowed=self._route_allowed())
             if d.action is Admission.ADMIT and not d.probe:
                 adm.reclassify(d.req_class, Admission.QUEUE, Admission.ADMIT)
                 self._displaced_rids.discard(req.rid)
@@ -365,6 +423,11 @@ class FleetGateway:
         healthy = self.router.healthy()
         if not healthy:
             return 0                 # nowhere to go: degrade gracefully
+        # role split: unstarted requests can only relocate to
+        # prefill-capable replicas, live sessions only to decode-capable
+        # ones (a prefill-only replica has no decode slots to give)
+        h_prefill = [h for h in healthy if h in set(self._prefill_ok)]
+        h_decode = [h for h in healthy if h in set(self._decode_ok)]
         moved = 0
         for r in quarantined:
             e = self.engines[r]
@@ -377,7 +440,7 @@ class FleetGateway:
                 # a relocated prompt must fit the destination's cache
                 # (heterogeneous max_seq fleets) — a non-fitting dispatch
                 # would blow up that engine's next admission
-                fits = [h for h in healthy
+                fits = [h for h in h_prefill
                         if len(req.prompt) < self.engines[h].max_seq]
                 if t is None:
                     # not gateway-managed (submitted straight to the
@@ -394,7 +457,8 @@ class FleetGateway:
                     continue
                 t_arrival = t.t_arrival
                 d = self.router.route(len(req.prompt), req.max_new,
-                                      backlog=self.backlog(), requeue=True)
+                                      backlog=self.backlog(), requeue=True,
+                                      allowed=self._route_allowed())
                 # the router's overflow may re-pick the replica being
                 # drained (its drift-scaled cost still beats every
                 # congested healthy queue): honor it — the request stays
@@ -427,10 +491,10 @@ class FleetGateway:
             for sess in e.drain_sessions():
                 i = self._tracked_index(sess.req.rid)
                 t = self.tracked[i] if i is not None else None
-                if t is not None and t.probe:
+                if (t is not None and t.probe) or not h_decode:
                     e.import_session(sess)
                     continue
-                dest = self._place_session(sess, r, healthy)
+                dest = self._place_session(sess, r, h_decode)
                 if dest is not None:
                     if t is not None:            # gateway-managed: move the
                         t.replica = dest         # dispatch credit along
@@ -438,7 +502,7 @@ class FleetGateway:
                         self._per_replica[dest] += 1
                     moved += 1
             for t in list(self.tracked):
-                if t.replica != r or t.probe or t.req.done:
+                if t.replica != r or t.probe or t.req.done or not h_decode:
                     continue
                 pos = e.active_pos(t.req.rid)
                 if pos is None:
@@ -448,15 +512,15 @@ class FleetGateway:
                 # session would only bounce back here every pump)
                 remaining = max(t.req.max_new - len(t.req.out_tokens), 0)
                 if not any(self.engines[h].can_hold(pos, remaining)
-                           for h in healthy):
+                           for h in h_decode):
                     continue
                 # the move must pay for itself: when a MigrationCost is
                 # configured and staying home ranks best, skip the export
                 # (the session drains slowly where its cache already is)
-                if not self._migration_pays(r, healthy, pos):
+                if not self._migration_pays(r, h_decode, pos):
                     continue
                 sess = e.export_session(t.req.rid)
-                dest = self._place_session(sess, r, healthy)
+                dest = self._place_session(sess, r, h_decode)
                 if dest is None:
                     continue         # nowhere fits: stays on the source
                 t.replica = dest
@@ -467,6 +531,132 @@ class FleetGateway:
         if moved and self._m_migrations is not None:
             self._m_migrations.inc(moved)
         return moved
+
+    # -- prefill -> decode disaggregation ----------------------------------
+    def _harvest_ttft(self, t: _Tracked) -> None:
+        """Record one tracked request's TTFT (client-facing + PTT/service
+        training samples) the first time it has a token.  Idempotent: a
+        second call is a no-op.  Called from :meth:`pump`'s harvest loop
+        and from :meth:`_handoff` — a disaggregated request's first token
+        exists the moment prefill completes, and it must be attributed to
+        the *prefill* replica before the tracked entry moves to its decode
+        home."""
+        if t.ttft is not None or not t.req.out_tokens:
+            return
+        # the engine stamps first-token time at prefill, so the sample is
+        # exact — not inflated by other admissions, the batch decode, or
+        # other engines' steps this pump
+        tok = (t.req.t_first if t.req.t_first is not None else self.clock())
+        t.ttft = tok - t.t_arrival
+        if len(self._ttfts) >= self.TTFT_CAP:    # evict oldest
+            self._ttfts.pop(next(iter(self._ttfts)))
+        self._ttfts[t.req.rid] = t.ttft
+        if self._h_ttft is not None:
+            self._h_ttft.observe(t.ttft)
+        # the learning samples span prefill-start -> first token (the
+        # engine stamps t_admit), NOT dispatch -> first token: the
+        # engine-queue wait is what QueueAware's backlog term models, so
+        # baking it into the TTFT row or the service rate would
+        # double-count congestion against busy-but-fast replicas
+        # (client-facing TTFT in ``ttfts()`` still includes every wait)
+        t0 = t.req.t_admit if t.req.t_admit is not None else t.t_dispatch
+        self.router.record_ttft(t.replica, t.req_class, tok - t0,
+                                prompt_len=len(t.req.prompt))
+        self.router.record_service(t.replica, tok - t0,
+                                   req_class=t.req_class)
+
+    def _handoff(self, sess: Session, source: int) -> None:
+        """Ship a freshly prefilled session from its prefill-specialized
+        replica to the predicted-TPOT-best decode replica.  Fired by the
+        prefill engine's ``on_prefill_complete`` hook — the first token is
+        already in ``sess.req.out_tokens`` (prefill produced it), so the
+        request's TTFT is harvested HERE, against the prefill replica,
+        before its tracked entry moves to the decode home.
+
+        The destination is ranked exactly like a quarantine-drain
+        placement: ``QueueAware + MigrationCost`` (the router's sticky
+        cost) over the decode-capable healthy set, priced on ``sess.pos``
+        tokens of KV.  The session crosses the real RSES wire format
+        (encode -> bytes -> decode), so the handoff is sized and timed
+        like any other migration: ship wall time and payload bytes land in
+        :meth:`ttft_breakdown` and the handoff histograms."""
+        # lazy import: repro.region.gateway imports this module, so a
+        # top-level import of the wire codec would cycle at package init
+        from ..region.wire import decode_session, encode_session
+        t0 = self.clock()
+        i = self._tracked_index(sess.req.rid)
+        t = self.tracked[i] if i is not None else None
+        if t is not None:
+            self._harvest_ttft(t)
+        healthy = [h for h in self.router.healthy()
+                   if h in set(self._decode_ok)]
+        remaining = max(sess.req.max_new - len(sess.req.out_tokens), 0)
+        order = self.router.fleet.ranked_search(
+            int(RequestClass.DECODE), metric=FleetPTT.TPOT,
+            healthy=healthy or self._decode_ok, backlog=self.backlog(),
+            tokens=sess.pos, cost=self.router.sticky_cost,
+            attribution=self.router.attr_hook(
+                "disagg-handoff", RequestClass.DECODE, source=source,
+                rid=sess.req.rid))
+        order += [r for r in self._decode_ok if r not in order]
+        data = encode_session(sess)
+        shipped = decode_session(data)
+        # the cache crossed the real wire encoding (sized, checksummed,
+        # compressed) — but this tier is in-process, and callers hold the
+        # original Request object, so the decoded copy's handle is swapped
+        # back (cross-PROCESS identity via rid-keyed handles is the region
+        # tier's job, see RegionGateway.request)
+        shipped.req = sess.req
+        dest = None
+        for cand in order:
+            if not self.engines[cand].can_hold(shipped.pos, remaining):
+                continue
+            try:
+                self.engines[cand].import_session(shipped)
+            except ValueError:
+                continue
+            dest = cand
+            break
+        if dest is None:
+            # nowhere decode-capable fits: finish where it was born — a
+            # prefill-role engine still decodes correctly, it just isn't
+            # supposed to be good at it
+            self.engines[source].import_session(sess, strict=False)
+            dest = source
+        ship = self.clock() - t0
+        if t is not None:
+            self._per_replica[t.replica] -= 1    # credit follows the work
+            self._per_replica[dest] += 1
+            t.replica = dest
+            t.t_handoff = self.clock()
+        self._handoffs += 1
+        req = sess.req
+        bd = {"prefill_s": None, "ship_s": ship, "first_decode_s": None,
+              "source": source, "dest": dest, "nbytes": len(data)}
+        if req.t_first is not None and req.t_admit is not None:
+            bd["prefill_s"] = req.t_first - req.t_admit
+        if len(self._breakdown) >= self.TTFT_CAP:
+            self._breakdown.pop(next(iter(self._breakdown)))
+        self._breakdown[req.rid] = bd
+        if self._m_handoffs is not None:
+            self._m_handoffs.inc()
+            self._h_handoff.observe(ship)
+            self._h_handoff_bytes.observe(float(len(data)))
+        if self.tracer.enabled:
+            tr = self.tracer.trace_for(req.rid)
+            if tr is not None:
+                self.tracer.complete(
+                    "disagg-ship", tr, self.obs_name, ts=t0, dur=ship,
+                    source=source, dest=dest, nbytes=len(data),
+                    tokens=sess.pos)
+
+    def ttft_breakdown(self) -> dict[int, dict]:
+        """Per-rid TTFT attribution for disaggregated requests:
+        ``{prefill_s, ship_s, first_decode_s, source, dest, nbytes}``.
+        ``first_decode_s`` is stamped at pump granularity when the first
+        decode-produced token (the request's *second* token) appears;
+        ``None`` until then."""
+        return {rid: dict(bd) for rid, bd in self._breakdown.items()}
 
     # -- region-tier export hooks ------------------------------------------
     # A RegionGateway draining a browned-out fleet pulls work out through
@@ -546,9 +736,12 @@ class FleetGateway:
         raise KeyError(f"rid {rid} is not active on this fleet")
 
     def can_hold(self, pos: int, remaining: int) -> bool:
-        """Whether any replica in this fleet can finish a session at
-        ``pos`` with ``remaining`` tokens without truncation."""
-        return any(e.can_hold(pos, remaining) for e in self.engines)
+        """Whether any *decode-capable* replica in this fleet can finish a
+        session at ``pos`` with ``remaining`` tokens without truncation —
+        prefill-specialized replicas never host decode sessions, so they
+        don't count toward feasibility."""
+        return any(self.engines[i].can_hold(pos, remaining)
+                   for i in self._decode_ok)
 
     def adopt_session(self, sess: Session) -> int:
         """Accept a session migrated in from another fleet: place it on
@@ -562,11 +755,14 @@ class FleetGateway:
         so no TTFT sample is harvested here.  Returns the replica; raises
         ValueError when no replica fits."""
         remaining = max(sess.req.max_new - len(sess.req.out_tokens), 0)
-        healthy = self.router.healthy()
+        # decode-capable hosts only: a prefill-specialized replica has no
+        # decode slots, so a WAN-shipped session must never rank onto one
+        healthy = [h for h in self.router.healthy()
+                   if h in set(self._decode_ok)]
         ranked = self.router.fleet.ranked_search(
             int(RequestClass.DECODE), metric=FleetPTT.TPOT,
-            healthy=healthy or None, backlog=self.backlog())
-        ranked += [r for r in range(len(self.engines)) if r not in ranked]
+            healthy=healthy or self._decode_ok, backlog=self.backlog())
+        ranked += [r for r in self._decode_ok if r not in ranked]
         for dest in ranked:
             if not self.engines[dest].can_hold(sess.pos, remaining):
                 continue
@@ -592,31 +788,16 @@ class FleetGateway:
             active += e.step()
         in_flight = []
         for t in self.tracked:
-            if t.ttft is None and t.req.out_tokens:
-                # the engine stamps first-token time at prefill, so the
-                # sample is exact — not inflated by other admissions, the
-                # batch decode, or other engines' steps this pump
-                tok = (t.req.t_first if t.req.t_first is not None
-                       else self.clock())
-                t.ttft = tok - t.t_arrival
-                if len(self._ttfts) >= self.TTFT_CAP:    # evict oldest
-                    self._ttfts.pop(next(iter(self._ttfts)))
-                self._ttfts[t.req.rid] = t.ttft
-                if self._h_ttft is not None:
-                    self._h_ttft.observe(t.ttft)
-                # the learning samples span prefill-start -> first token
-                # (the engine stamps t_admit), NOT dispatch -> first
-                # token: the engine-queue wait is what QueueAware's
-                # backlog term models, so baking it into the TTFT row or
-                # the service rate would double-count congestion against
-                # busy-but-fast replicas (client-facing TTFT in
-                # ``ttfts()`` still includes every wait)
-                t0 = t.req.t_admit if t.req.t_admit is not None \
-                    else t.t_dispatch
-                self.router.record_ttft(t.replica, t.req_class, tok - t0,
-                                        prompt_len=len(t.req.prompt))
-                self.router.record_service(t.replica, tok - t0,
-                                           req_class=t.req_class)
+            self._harvest_ttft(t)
+            if (t.t_handoff is not None and t.first_decode is None
+                    and len(t.req.out_tokens) >= 2):
+                # the first decode-produced token after a disaggregated
+                # handoff (the prefill token is out_tokens[0]) — pump
+                # granularity, which is also the client's visibility
+                t.first_decode = self.clock()
+                bd = self._breakdown.get(t.req.rid)
+                if bd is not None:
+                    bd["first_decode_s"] = t.first_decode - t.t_handoff
             if t.req.done and t.ttft is not None:
                 self._served += 1       # finished: stop tracking it
                 if self._m_served is not None:
@@ -647,6 +828,8 @@ class FleetGateway:
                             + sum(e.pending() for e in self.engines))
         s["served"] = self._served
         s["migrations"] = self._migrations
+        s["roles"] = list(self.roles)
+        s["prefill_handoffs"] = self._handoffs
         s["shed_requests"] = [r.rid for r in self.shed]
         s["tenant_shed_debt"] = dict(self._tenant_debt)
         s["per_replica"] = list(self._per_replica)

@@ -78,6 +78,10 @@ class FleetRouter:
         # decay target is anchor x drift (decaying the live row by the
         # ratio every sample would compound without bound)
         self._svc_anchor: dict[int, float] = {}
+        # chunked-prefill wall-time EMA per replica: its own signal,
+        # deliberately OUTSIDE the interference detector (see
+        # record_prefill_chunk)
+        self._prefill_chunk_ema: dict[int, float] = {}
         self.attribution = attribution
         self.tracer = NULL_TRACER
         self.metrics = None
@@ -146,16 +150,38 @@ class FleetRouter:
     def route(self, prompt_len: int, max_new: int,
               affinity: int | None = None,
               backlog: Sequence[int] | None = None,
-              requeue: bool = False) -> RouteDecision:
+              requeue: bool = False,
+              allowed: Sequence[int] | None = None) -> RouteDecision:
         """Pick a replica for one request.  ``backlog``: per-replica count
         of requests already queued/active (from ``ServeEngine.pending()``);
         used to inflate the predicted TTFT for admission.  ``requeue``:
         re-evaluation of an already-QUEUE-counted request — the admission
         outcome is computed without incrementing the counters (the gateway
-        reclassifies on outcome change)."""
+        reclassifies on outcome change).  ``allowed``: restrict candidates
+        to this replica subset (role-specialized fleets: a fresh request
+        may only land on a prefill-capable replica).  Quarantine still
+        filters within the subset; when every allowed replica is
+        quarantined the search degrades to the allowed set itself — a
+        capable-but-slow replica beats an incapable one."""
         c = classify_request(prompt_len, max_new)
         healthy = self.detector.healthy()
         quarantined = sorted(self.detector.quarantined)
+        if allowed is not None:
+            aset = set(allowed)
+            healthy = [r for r in healthy if r in aset]
+            quarantined = [r for r in quarantined if r in aset]
+            if not healthy and not quarantined:
+                # nothing allowed is even quarantined (empty subset):
+                # caller misconfiguration — fail loudly, don't misroute
+                raise ValueError("allowed replica set is empty")
+            if affinity is not None and affinity not in aset:
+                affinity = None
+        # search pool: healthy candidates, degrading to "everything" when
+        # all replicas are quarantined — but a role restriction must degrade
+        # to its own (quarantined) subset, never escape to incapable hosts
+        pool = healthy or None
+        if allowed is not None and not healthy:
+            pool = quarantined
 
         # probe: an occasional request visits a quarantined replica so it
         # can prove recovery — a drained quarantined replica emits no
@@ -212,21 +238,21 @@ class FleetRouter:
                 # migration term (when configured) charges the KV/prefix
                 # re-ingest the move would cost
                 r = self.fleet.sticky_search(c, affinity,
-                                             healthy=healthy or None,
+                                             healthy=pool,
                                              backlog=backlog,
                                              tokens=prompt_len,
                                              cost=self.sticky_cost,
                                              attribution=attrib)
             else:
                 r = self.fleet.global_search(c, metric=FleetPTT.TPOT,
-                                             healthy=healthy or None,
+                                             healthy=pool,
                                              backlog=backlog,
                                              cost=self.cost,
                                              attribution=attrib)
         else:
             # all replicas quarantined: degrade gracefully, route anyway
             r = self.fleet.global_search(c, metric=FleetPTT.TTFT,
-                                         healthy=healthy or None,
+                                         healthy=pool,
                                          backlog=backlog, tokens=prompt_len,
                                          cost=self.cost,
                                          attribution=attrib)
@@ -336,6 +362,24 @@ class FleetRouter:
             # let real completion samples re-train the row
             self._svc_anchor.pop(replica, None)
 
+    def record_prefill_chunk(self, replica: int, latency: float) -> None:
+        """Chunked-prefill wall time on ``replica`` — a *separate* signal
+        from decode steps.  It is never fed to the interference detector:
+        a long prompt's chunks admitted mid-decode are legitimately slower
+        than decode steps, and mixing them into the homogeneous per-step
+        signal would read as a latency spike and quarantine a healthy
+        replica.  Trains a per-replica EMA (``stats()``) and the
+        ``fleet_prefill_chunk_seconds`` histogram when metrics are
+        attached."""
+        old = self._prefill_chunk_ema.get(replica)
+        self._prefill_chunk_ema[replica] = (
+            latency if old is None else (4.0 * old + latency) / 5.0)
+        if self.metrics is not None:
+            self.metrics.histogram(
+                "fleet_prefill_chunk_seconds",
+                "Chunked-prefill wall time per chunk (role-split signal)",
+                fleet=self.obs_name, replica=replica).observe(latency)
+
     def _decay_quarantined_service(self, replica: int) -> None:
         """One bounded decay tick for a quarantined replica's service rate:
         EMA toward ``healthy-era anchor x live drift`` (the anchor is
@@ -375,4 +419,5 @@ class FleetRouter:
                 "events": list(self.detector.events),
                 "drift": [round(self.detector.drift(r), 3)
                           for r in range(n)],
+                "prefill_chunk_ema": dict(self._prefill_chunk_ema),
                 "ptt_updates": self.fleet.updates}

@@ -80,21 +80,58 @@ class Session:
                                  # so the importing engine's tracer can
                                  # continue the same timeline (wire v2's
                                  # optional "trace" key; None on v1 decode)
+    prefilled: int | None = None  # None = prefill complete (a decode
+                                  # session); else the number of prompt
+                                  # tokens already consumed — a mid-prefill
+                                  # export whose cache holds only those rows
+                                  # (``cur_token`` is meaningless until the
+                                  # remaining chunks run; wire v3's optional
+                                  # "prefilled" key)
+
+
+@dataclasses.dataclass
+class _Prefill:
+    """An in-progress chunked prefill: the request plus its own growing
+    (L, 1, max_seq, ...) device cache, donated back into the jit every
+    chunk.  Lives outside the batch slots — a 32k prompt prefilling in
+    chunks never blocks a decode slot."""
+    req: Request
+    cache: dict
+    consumed: int = 0            # prompt tokens already in the cache
+    logits = None                # last chunk's (1, 1, V) logits
+    t_start: float | None = None  # first chunk wall time (prefill span)
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, max_batch: int, max_seq: int,
                  num_groups: int = 1, decode_chunk: int = 1,
-                 fused: bool = True):
+                 fused: bool = True, role: str = "both",
+                 prefill_chunk_tokens: int = 0):
+        if role not in ("prefill", "decode", "both"):
+            raise ValueError(f"unknown role {role!r}")
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.decode_chunk = max(int(decode_chunk), 1)
         self.fused = fused
+        # disaggregation surface: ``role`` is the replica's specialization
+        # (a scheduling preference the gateway routes by — the engine stays
+        # fully capable either way).  ``prefill_chunk_tokens`` > 0 admits
+        # prompts through ``Model.prefill_chunk`` in fixed-size chunks that
+        # interleave with decode steps instead of one whole-prompt dispatch
+        # (falls back to whole-prompt prefill for families without a
+        # chunkable prefill).
+        self.role = role
+        self.prefill_chunk_tokens = max(int(prefill_chunk_tokens), 0)
         self.scheduler = ElasticServeScheduler(num_groups)
         self.queue: deque[Request] = deque()
         self.sessions_in: deque[Session] = deque()   # imported, not yet slotted
+        self.prefilling: deque[_Prefill] = deque()   # chunked prefills in
+                                                     # flight (no slot held)
+        self._prefill_ready: deque[tuple[Request, int, dict]] = deque()
+                                 # chunk-prefilled, waiting for a free slot
+                                 # (req, next_token, device cache)
         self.active: list[Request | None] = [None] * max_batch
         self.cache = None
         self.pos = np.zeros(max_batch, dtype=np.int32)
@@ -121,6 +158,19 @@ class ServeEngine:
         # last_step_latency untouched.
         self.on_step_latency = None
         self.last_step_latency = 0.0
+        # chunked prefill reports to its OWN signal — never
+        # ``on_step_latency``: the interference detector's fast/baseline
+        # tables need a homogeneous per-replica decode signal, and a
+        # long-prompt prefill burst folded into it would read as a latency
+        # spike (false quarantine) on a healthy replica
+        self.on_prefill_latency = None
+        self.last_prefill_chunk_latency = 0.0
+        # disaggregation hook: when set (prefill-role replicas), a request
+        # whose prefill just completed is frozen into a Session straight
+        # off its prefill cache and handed to the callback — it never takes
+        # a decode slot here (the fused prefill+admit path: the gateway
+        # ships it to the decode-best replica)
+        self.on_prefill_complete = None
         # observability (attach_obs): NULL_TRACER/no registry by default —
         # the decode hot path pays one `tracer.enabled` check per chunk
         self.tracer = NULL_TRACER
@@ -131,7 +181,7 @@ class ServeEngine:
         self._imports = 0        # sessions migrated in
         self._m_served = self._m_tokens = None
         self._m_exports = self._m_imports = None
-        self._h_prefill = self._h_step = None
+        self._h_prefill = self._h_step = self._h_prefill_chunk = None
 
     # -- observability -----------------------------------------------------
     def attach_obs(self, tracer=None, metrics=None,
@@ -165,6 +215,10 @@ class ServeEngine:
             self._h_step = metrics.histogram(
                 "serve_decode_step_seconds",
                 "Decode latency per token (elapsed / chunk)", engine=e)
+            self._h_prefill_chunk = metrics.histogram(
+                "serve_prefill_chunk_seconds",
+                "Per-chunk prefill wall time (chunked admission)",
+                engine=e, role=self.role)
 
     def stats(self) -> dict:
         """Counter facade with the unified cross-scale key names
@@ -178,6 +232,8 @@ class ServeEngine:
             "sessions_imported": self._imports,
             "active": self.active_count(),
             "utilization": self.utilization(),
+            "role": self.role,
+            "prefilling": len(self.prefilling) + len(self._prefill_ready),
         }
 
     # -- admission ---------------------------------------------------------
@@ -186,8 +242,10 @@ class ServeEngine:
 
     # -- non-blocking fleet surface ----------------------------------------
     def pending(self) -> int:
-        """Requests queued (fresh or imported sessions) but not slotted."""
-        return len(self.queue) + len(self.sessions_in)
+        """Requests queued (fresh, imported sessions, chunked prefills in
+        flight, or prefilled-and-waiting) but not slotted."""
+        return (len(self.queue) + len(self.sessions_in)
+                + len(self.prefilling) + len(self._prefill_ready))
 
     def active_count(self) -> int:
         return sum(r is not None for r in self.active)
@@ -205,14 +263,87 @@ class ServeEngine:
             self.cache = jax.tree.map(
                 lambda s: jnp.zeros(s.shape, s.dtype), spec)
 
+    def _chunking(self) -> bool:
+        """Whether chunked prefill admission is live on this engine."""
+        return (self.prefill_chunk_tokens > 0
+                and self.model.prefill_chunk is not None)
+
+    def _slot_in(self, slot: int, req: Request, next_tok: int,
+                 cache) -> None:
+        """Install a freshly-prefilled request into a batch slot (its cache
+        may be a whole-prompt prefill cache or a chunked (1, max_seq)
+        cache — ``insert_session`` handles both device-side, no host
+        round trip)."""
+        self._ensure_cache()
+        self.cache = self.model.insert_session(self.cache, slot, cache)
+        self.active[slot] = req
+        self.pos[slot] = len(req.prompt)
+        self.cur_token[slot, 0] = next_tok
+        self._dev_dirty = True
+
+    def _complete_prefill(self, req: Request, next_tok: int, cache) -> bool:
+        """Shared prefill epilogue (whole-prompt and chunked): stamp the
+        first token, then finish, hand off, or return False so the caller
+        slots the request locally.
+
+        The handoff branch is the fused prefill+admit path: when
+        ``on_prefill_complete`` is set (prefill-role replicas), the live
+        session is frozen **straight off the prefill cache** — no batch
+        slot, no ``insert_session`` dispatch, no decode ever runs here —
+        and handed to the gateway, which ships it to the decode-best
+        replica."""
+        req.out_tokens.append(next_tok)
+        req.t_first = time.perf_counter()
+        if len(req.out_tokens) >= req.max_new:
+            req.done = True          # finished at prefill: no slot used
+            self._finish(req)
+            return True
+        if self.on_prefill_complete is not None:
+            sess = Session(
+                req=req, pos=len(req.prompt), cur_token=next_tok,
+                cache=self.model.extract_session(cache, 0, len(req.prompt)))
+            self._exports += 1
+            if self._m_exports is not None:
+                self._m_exports.inc()
+            if self.tracer.enabled:
+                tid = self.tracer.trace_for(req.rid)
+                if tid is not None:
+                    sess.trace = {"trace_id": tid}
+                    self.tracer.instant("prefill-handoff", tid,
+                                        self.obs_name, pos=sess.pos)
+            self.on_prefill_complete(sess)
+            return True
+        return False
+
     def _admit(self) -> None:
         # ragged continuous batching: any free slot takes any queued prompt
-        # (imported sessions first — their prefill was already paid on the
+        # (chunk-prefilled requests first — their cache is already device
+        # resident — then imported sessions, whose prefill was paid on the
         # engine they came from)
         slots = self._free_slots()
+        while slots and self._prefill_ready:
+            req, next_tok, cache = self._prefill_ready.popleft()
+            self._slot_in(slots.pop(0), req, next_tok, cache)
         while slots and self.sessions_in:
             self._install_session(slots.pop(0), self.sessions_in.popleft())
-        while slots and self.queue:
+        while self.queue:
+            chunkable = self._chunking() and not self.queue[0].extras
+            if chunkable:
+                # chunked admission holds no slot: the prompt prefills in
+                # its own cache (one chunk per step, between decode chunks)
+                # and claims a slot — or ships — only when done
+                if len(self.prefilling) >= self.max_batch:
+                    break
+                req = self.queue.popleft()
+                req.t_admit = time.perf_counter()
+                spec = self.model.cache_spec(1, self.max_seq)
+                cache = jax.tree.map(
+                    lambda s: jnp.zeros(s.shape, s.dtype), spec)
+                self.prefilling.append(_Prefill(req=req, cache=cache))
+                continue
+            if not slots and self.on_prefill_complete is None:
+                break                # whole-prompt path needs a slot unless
+                                     # every completion hands off
             req = self.queue.popleft()
             t0 = time.perf_counter()
             req.t_admit = t0
@@ -224,25 +355,64 @@ class ServeEngine:
             next_tok = int(jnp.argmax(logits[0, -1]))
             prefill_dur = time.perf_counter() - t0
             self.scheduler.record(d, prefill_dur, time.perf_counter())
-            req.out_tokens.append(next_tok)
-            req.t_first = time.perf_counter()
             if self.tracer.enabled:
-                self.tracer.complete(
-                    "prefill", self.tracer.trace_for(req.rid), self.obs_name,
-                    ts=t0, dur=prefill_dur, prompt_len=len(req.prompt))
+                tid = self.tracer.trace_for(req.rid)
+                if tid is not None:
+                    self.tracer.complete(
+                        "prefill", tid, self.obs_name,
+                        ts=t0, dur=prefill_dur, prompt_len=len(req.prompt))
             if self._h_prefill is not None:
                 self._h_prefill.observe(prefill_dur)
-            if len(req.out_tokens) >= req.max_new:
-                req.done = True          # finished at prefill: no slot used
-                self._finish(req)
-                continue
-            slot = slots.pop(0)
-            self._ensure_cache()
-            self.cache = self.model.insert_session(self.cache, slot, cache)
-            self.active[slot] = req
-            self.pos[slot] = len(req.prompt)
-            self.cur_token[slot, 0] = next_tok
-            self._dev_dirty = True
+            if self._complete_prefill(req, next_tok, cache):
+                continue             # finished at prefill or handed off
+            self._slot_in(slots.pop(0), req, next_tok, cache)
+
+    def _advance_prefill(self) -> None:
+        """Run ONE prefill chunk for the oldest in-flight chunked prefill —
+        called once per engine step, so a long prompt prefills incrementally
+        between decode chunks instead of blocking them.  Chunk latency
+        reports to ``on_prefill_latency`` / ``serve_prefill_chunk_seconds``
+        (its own signal), never to the decode step hook."""
+        if not self.prefilling:
+            return
+        pf = self.prefilling[0]
+        prompt = np.asarray(pf.req.prompt)
+        C = self.prefill_chunk_tokens
+        qlen = min(C, len(prompt) - pf.consumed)
+        t0 = time.perf_counter()
+        if pf.t_start is None:
+            pf.t_start = t0
+        d = self.scheduler.schedule_prefill(qlen)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :qlen] = prompt[pf.consumed:pf.consumed + qlen]
+        logits, pf.cache = self.model.prefill_chunk(
+            self.params, jnp.asarray(chunk), pf.cache,
+            jnp.asarray([pf.consumed], jnp.int32),
+            jnp.asarray([qlen], jnp.int32))
+        pf.logits = logits
+        pf.consumed += qlen
+        done = pf.consumed >= len(prompt)
+        if done:
+            next_tok = int(jnp.argmax(logits[0, -1]))    # chunk's host sync
+        dur = time.perf_counter() - t0
+        self.scheduler.record(d, dur, time.perf_counter())
+        self.last_prefill_chunk_latency = dur
+        if self._h_prefill_chunk is not None:
+            self._h_prefill_chunk.observe(dur)
+        if self.tracer.enabled:
+            tid = self.tracer.trace_for(pf.req.rid)
+            if tid is not None:
+                self.tracer.complete("prefill-chunk", tid, self.obs_name,
+                                     ts=t0, dur=dur, tokens=qlen,
+                                     consumed=pf.consumed)
+        if self.on_prefill_latency is not None:
+            self.on_prefill_latency(dur)
+        if done:
+            self.prefilling.popleft()
+            if self._h_prefill is not None:
+                self._h_prefill.observe(time.perf_counter() - pf.t_start)
+            if not self._complete_prefill(pf.req, next_tok, pf.cache):
+                self._prefill_ready.append((pf.req, next_tok, pf.cache))
 
     def _finish(self, req: Request) -> None:
         """Bookkeep one finished request (counter + optional instant)."""
@@ -273,11 +443,39 @@ class ServeEngine:
                     self._m_exports.inc()
                 if self.tracer.enabled:
                     tid = self.tracer.trace_for(rid)
-                    sess.trace = {"trace_id": tid}
-                    self.tracer.instant("migrate-out", tid, self.obs_name,
-                                        pos=pos)
+                    if tid is not None:      # sampled-out rids carry none
+                        sess.trace = {"trace_id": tid}
+                        self.tracer.instant("migrate-out", tid,
+                                            self.obs_name, pos=pos)
                 return sess
         raise KeyError(f"rid {rid} is not active on this engine")
+
+    def export_prefill(self, rid: int) -> Session:
+        """Freeze an in-progress chunked prefill into a transportable
+        partial Session (``prefilled`` = prompt tokens already consumed;
+        the cache holds exactly those rows).  The importing engine resumes
+        the remaining chunks — prefill work done so far is never redone.
+        Raises KeyError if ``rid`` is not mid-prefill here."""
+        for i, pf in enumerate(self.prefilling):
+            if pf.req.rid == rid:
+                del self.prefilling[i]
+                k = pf.consumed
+                sess = Session(
+                    req=pf.req, pos=k, cur_token=0,
+                    cache=self.model.extract_session(pf.cache, 0, k),
+                    prefilled=k)
+                self._exports += 1
+                if self._m_exports is not None:
+                    self._m_exports.inc()
+                if self.tracer.enabled:
+                    tid = self.tracer.trace_for(rid)
+                    if tid is not None:
+                        sess.trace = {"trace_id": tid}
+                        self.tracer.instant("migrate-out", tid,
+                                            self.obs_name, pos=k,
+                                            prefilled=k)
+                return sess
+        raise KeyError(f"rid {rid} is not mid-prefill on this engine")
 
     def can_hold(self, pos: int, remaining: int) -> bool:
         """Whether a session at ``pos`` with ``remaining`` tokens to decode
@@ -294,6 +492,9 @@ class ServeEngine:
         silently truncate the generation, breaking token identity across
         the migration.  ``strict=False`` is for re-parking a session on its
         source engine, where truncation semantics are unchanged."""
+        if sess.prefilled is not None:
+            self._import_partial(sess)
+            return
         if sess.pos >= self.max_seq - 1:
             raise ValueError(
                 f"session at pos {sess.pos} does not fit max_seq "
@@ -315,6 +516,35 @@ class ServeEngine:
                                 self.tracer.trace_for(sess.req.rid),
                                 self.obs_name, pos=sess.pos)
         self.sessions_in.append(sess)
+
+    def _import_partial(self, sess: Session) -> None:
+        """Adopt a mid-prefill session: rebuild the chunked-prefill state
+        (its cache rows land in a fresh per-request device cache) and
+        resume the remaining chunks from ``sess.prefilled``."""
+        if not self._chunking():
+            raise ValueError(
+                "partial-prefill session needs a chunked-prefill engine "
+                "(prefill_chunk_tokens > 0 and a chunkable model family)")
+        plen = len(sess.req.prompt)
+        if not self.can_hold(plen, max(sess.req.max_new, 1)):
+            raise ValueError(
+                f"prompt of {plen} with {sess.req.max_new} to decode does "
+                f"not fit max_seq {self.max_seq}")
+        self._imports += 1
+        if self._m_imports is not None:
+            self._m_imports.inc()
+        if sess.trace is not None:
+            self.tracer.adopt(sess.req.rid, sess.trace["trace_id"])
+        if self.tracer.enabled:
+            tid = self.tracer.trace_for(sess.req.rid)
+            if tid is not None:
+                self.tracer.instant("migrate-in", tid, self.obs_name,
+                                    pos=sess.pos, prefilled=sess.prefilled)
+        spec = self.model.cache_spec(1, self.max_seq)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+        cache = self.model.insert_session(cache, 0, sess.cache)
+        self.prefilling.append(
+            _Prefill(req=sess.req, cache=cache, consumed=sess.prefilled))
 
     def export_session_wire(self, rid: int) -> bytes:
         """:meth:`export_session` encoded with the versioned session wire
@@ -342,16 +572,29 @@ class ServeEngine:
 
     def drain_queue(self) -> list[Request]:
         """Remove and return all queued-but-unstarted requests (gateway
-        re-routes them when this replica is quarantined)."""
-        out = list(self.queue)
+        re-routes them when this replica is quarantined).  In-flight
+        chunked prefills are aborted back to plain requests — no token has
+        been emitted yet, so restarting the prefill elsewhere is
+        correctness-free (a planner that wants to keep the partial work
+        uses :meth:`export_prefill` instead)."""
+        out = list(self.queue) + [pf.req for pf in self.prefilling]
         self.queue.clear()
+        self.prefilling.clear()
         return out
 
     def drain_sessions(self) -> list[Session]:
         """Remove and return imported-but-not-yet-slotted sessions — a
-        quarantined replica must not decode them even once."""
+        quarantined replica must not decode them even once.  Requests that
+        finished a chunked prefill but are still waiting for a slot leave
+        as full sessions (their first token is already stamped)."""
         out = list(self.sessions_in)
         self.sessions_in.clear()
+        for req, next_tok, cache in self._prefill_ready:
+            out.append(Session(
+                req=req, pos=len(req.prompt), cur_token=next_tok,
+                cache=self.model.extract_session(cache, 0,
+                                                 len(req.prompt))))
+        self._prefill_ready.clear()
         return out
 
     def _install_session(self, slot: int, sess: Session) -> None:
@@ -379,6 +622,7 @@ class ServeEngine:
         (elapsed / chunk), keeping the interference signal comparable
         across chunk sizes."""
         self._admit()
+        self._advance_prefill()      # one chunk, timed on its own signal
         n_active = self.active_count()
         if n_active == 0:
             return 0

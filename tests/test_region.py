@@ -110,17 +110,19 @@ def test_wire_rejects_corrupt_and_foreign_payloads():
 
 
 def test_wire_v1_payload_still_decodes():
-    """Backward compat: v2 only added an optional payload key, so a v1
-    payload — same layout, version byte 1, no "trace" key — must decode
-    unchanged (trace=None), while versions outside WIRE_COMPAT raise."""
-    assert WIRE_VERSION == 2 and WIRE_COMPAT == frozenset({1, 2})
+    """Backward compat: v2/v3 each only added an optional payload key, so
+    a v1 payload — same layout, version byte 1, no "trace"/"prefilled"
+    keys — must decode unchanged (trace=None, prefilled=None), while
+    versions outside WIRE_COMPAT raise."""
+    assert WIRE_VERSION == 3 and WIRE_COMPAT == frozenset({1, 2, 3})
     sess = _synthetic_session()
     assert sess.trace is None
-    data = bytearray(encode_session(sess))      # v2 writer, no trace key:
-    data[4] = 1                                 # byte-identical to a v1
-    out = decode_session(bytes(data))           # writer's output
+    data = bytearray(encode_session(sess))      # v3 writer, no optional
+    data[4] = 1                                 # keys: byte-identical to a
+    out = decode_session(bytes(data))           # v1 writer's output
     assert wire_header(bytes(data))["version"] == 1
     assert out.pos == sess.pos and out.trace is None
+    assert out.prefilled is None
     assert out.req.out_tokens == sess.req.out_tokens
     for k in sess.cache:
         assert np.array_equal(out.cache[k], sess.cache[k])
