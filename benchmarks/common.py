@@ -4,6 +4,10 @@ task (µs) for simulator benchmarks, wall µs for real execution."""
 
 from __future__ import annotations
 
+import contextlib
+import dataclasses
+import time
+
 import numpy as np
 
 from repro.core import (HomogeneousScheduler, KernelType,
@@ -13,6 +17,35 @@ from repro.sim import XiTAOSim
 
 def row(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+@dataclasses.dataclass
+class Measured:
+    """Result handle of :func:`measured_block`; ``seconds`` is valid once
+    the block exits (0.0 while still inside)."""
+    seconds: float = 0.0
+
+    @property
+    def us(self) -> float:
+        return self.seconds * 1e6
+
+
+@contextlib.contextmanager
+def measured_block():
+    """Monotonic-clock duration measurement — THE way benchmarks time a
+    block, so the ``wall-clock-latency`` analysis rule can hold repo-wide
+    (``time.time()`` jumps with NTP slews and never measures a duration)::
+
+        with measured_block() as m:
+            engine.step()
+        steps.append(m.seconds)
+    """
+    m = Measured()
+    t0 = time.perf_counter()
+    try:
+        yield m
+    finally:
+        m.seconds = time.perf_counter() - t0
 
 
 def percentile(samples, q: float) -> float:

@@ -4,8 +4,6 @@ the kernels comes from the dry-run analysis)."""
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 import jax
@@ -18,16 +16,16 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.matmul.kernel import matmul_pallas
 from repro.kernels.matmul.ref import matmul_ref
 
-from .common import row
+from .common import measured_block, row
 
 
 def _time(f, *args, reps=5):
     f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
         jax.block_until_ready(f(*args))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(f(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+    with measured_block() as m:
+        for _ in range(reps):
+            jax.block_until_ready(f(*args))
+    return m.us / reps
 
 
 def main(quick: bool = False) -> None:

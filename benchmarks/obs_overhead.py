@@ -29,11 +29,10 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import numpy as np
 
-from .common import percentile, row
+from .common import measured_block, percentile, row
 
 ARCH = "smollm-135m"
 BATCH = 4
@@ -77,9 +76,9 @@ def _run_engine(cfg, m, params, *, instrumented: bool, max_new: int):
     steps, tokens, elapsed = [], 0, 0.0
     while engine.active_count():
         before = sum(len(r.out_tokens) for r in reqs)
-        t0 = time.perf_counter()
-        engine.step()
-        dt = time.perf_counter() - t0
+        with measured_block() as m:
+            engine.step()
+        dt = m.seconds
         produced = sum(len(r.out_tokens) for r in reqs) - before
         if produced:
             steps.append(dt / engine.decode_chunk)

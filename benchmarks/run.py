@@ -9,9 +9,9 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 import traceback
 
+from . import common
 from . import (disagg_serving, fig5_heatmap, fig6_kernels, fig7_speedup,
                fig8_interference, fig9_vgg_scaling, fig10_widths,
                fleet_routing, kernel_bench, obs_overhead, pod_serving,
@@ -46,13 +46,13 @@ def main() -> None:
     for name, mod in MODULES:
         if args.only and args.only not in name:
             continue
-        t0 = time.time()
-        try:
-            mod.main(quick=args.quick)
-        except Exception:
-            traceback.print_exc()
-            failed.append(name)
-        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        with common.measured_block() as m:
+            try:
+                mod.main(quick=args.quick)
+            except Exception:
+                traceback.print_exc()
+                failed.append(name)
+        print(f"# {name} done in {m.seconds:.1f}s", file=sys.stderr)
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -1,0 +1,47 @@
+"""Static-analysis & lowered-artifact audit suite — the CI gate for the
+serving stack's performance invariants.
+
+The paper's thesis is that a lightweight latency manifest can *infer*
+performance hazards before they cost you; this package applies the same
+posture to the codebase itself.  The invariants that earned the repo's
+serving wins — KV-cache donation (PR 4's 4.25x), the one-host-sync-per-
+chunk decode loop, wire-version compatibility, kernel/ref triads — are
+one-line regressions away from silently eroding, so they are enforced
+statically, on every commit, in three layers:
+
+* **Layer 1 — AST lint** (:mod:`repro.analysis.lint`): codebase-specific
+  rules over the source tree — host syncs in the decode/prefill hot path
+  (``hot-path-host-sync``), wall-clock duration measurement
+  (``wall-clock-latency``), span/metric creation in a hot path not behind
+  ``tracer.enabled`` (``unguarded-span``), wire-version bumps without a
+  compat-set edit (``wire-compat``), and kernel packages missing their
+  ``kernel.py``/``ops.py``/``ref.py`` triad, ``force_pallas`` context, or
+  ``tests/test_kernels.py`` case (``kernel-triad``).
+* **Layer 2 — lowered-artifact audit** (:mod:`repro.analysis.jaxpr_audit`):
+  lowers ``Model.decode_fused`` / ``Model.prefill_chunk`` for every model
+  family and asserts on the artifact — every KV-cache leaf actually
+  aliases input to output (a silently-dropped donation is a hard error),
+  no host callbacks or f64 promotions appear in the jaxpr, and the
+  compile-cache miss count across the supported chunk sizes/batch shapes
+  stays within the declared retrace budget.
+* **Layer 3 — contract checker** (:mod:`repro.analysis.contracts`): every
+  registered :class:`~repro.core.tracetable.CostModel` /
+  :class:`~repro.core.tracetable.SearchPolicy` implements its surface and
+  ``cost_terms()`` sums exactly to totals on synthetic contexts, and every
+  serving facade exposes the :data:`repro.obs.CANONICAL_STATS` counters.
+
+Findings are first-class (:class:`~repro.analysis.findings.Finding`: rule
+id, severity, file:line, message), render as JSON or human text, and gate
+against a baseline/suppression file — ``python -m repro.analysis`` exits
+non-zero on any *new* finding.  Intended one-off violations are annotated
+in-source (``# analysis: allow-<rule>(reason)``); everything else is
+either fixed or explicitly baselined with a reason.
+"""
+
+from .findings import (SEVERITY_ERROR, SEVERITY_WARNING, Baseline, Finding,
+                       render_human, render_json)
+
+__all__ = [
+    "Baseline", "Finding", "SEVERITY_ERROR", "SEVERITY_WARNING",
+    "render_human", "render_json",
+]

@@ -1,0 +1,363 @@
+"""Layer 1 — codebase-specific AST lint rules.
+
+Every rule here encodes an invariant a past PR paid for in benchmarks:
+
+* ``hot-path-host-sync`` — PR 4's 4.25x came from making the decode chunk
+  loop one-host-sync-per-chunk.  Any ``np.asarray`` / ``jax.device_get`` /
+  ``.item()`` / ``.block_until_ready()`` inside a function reachable from
+  the :class:`~repro.serve.engine.ServeEngine` decode-chunk/prefill-chunk
+  loops (``step`` / ``_advance_prefill``) is flagged unless the site is
+  annotated as an intended sync.
+* ``wall-clock-latency`` — every latency sample the TraceTable learns from
+  must come from a monotonic clock; ``time.time()`` jumps with NTP slews
+  and measures the wrong thing.  Use ``time.perf_counter()`` (or
+  ``time.monotonic()``); annotate the rare site that genuinely wants a
+  wall-clock *timestamp*.
+* ``unguarded-span`` — PR 6's CI gate holds the instrumented decode path
+  within 5% of the null path only because hot-path span emission hides
+  behind one ``tracer.enabled`` check and metric children are resolved
+  outside the loop.  Span emission not behind the guard, or metric
+  *creation* (registry lookups) inside a hot-path function, is flagged.
+* ``wire-compat`` — a module defining ``WIRE_VERSION`` must keep it inside
+  its literal ``WIRE_COMPAT`` set: a version bump without a compat-set
+  edit would make every current writer's payload unreadable to itself.
+* ``kernel-triad`` — every ``kernels/*/`` package ships the
+  ``kernel.py``/``ops.py``/``ref.py`` triad, a ``force_pallas`` surface in
+  ``ops.py`` (context manager or kwarg), and a ``tests/test_kernels.py``
+  case naming the package, so no kernel exists without an oracle and a
+  parity test.
+
+Intended one-off violations are annotated in-source on the offending
+line::
+
+    toks = np.asarray(toks_dev)   # analysis: allow-host-sync(reason)
+
+Annotation tokens: ``allow-host-sync``, ``allow-wall-clock``,
+``allow-unguarded-span``.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from .findings import SEVERITY_ERROR, SEVERITY_WARNING, Finding
+
+# -- annotations -------------------------------------------------------------
+
+_ALLOW_RE = re.compile(r"#\s*analysis:\s*allow-([a-z0-9-]+)")
+
+
+def allowed_lines(source: str) -> dict[int, set]:
+    """1-indexed line -> set of ``allow-*`` tokens found on that line."""
+    out: dict[int, set] = {}
+    for i, line in enumerate(source.splitlines(), 1):
+        for m in _ALLOW_RE.finditer(line):
+            out.setdefault(i, set()).add(m.group(1))
+    return out
+
+
+def _is_allowed(node: ast.AST, allows: dict[int, set], token: str) -> bool:
+    end = getattr(node, "end_lineno", node.lineno)
+    return any(token in allows.get(ln, ())
+               for ln in range(node.lineno, end + 1))
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of a pure attribute chain (``self.tracer.instant``),
+    or "" when the expression is anything else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+# -- hot-path-host-sync / unguarded-span -------------------------------------
+
+HOT_PATH_FILE = "src/repro/serve/engine.py"
+HOT_PATH_CLASS = "ServeEngine"
+# the decode-chunk and prefill-chunk loops: everything the engine runs per
+# step is reachable from these two
+HOT_PATH_SEEDS = ("step", "_advance_prefill")
+
+_SYNC_CALLS = {"np.asarray", "numpy.asarray", "jax.device_get"}
+_SYNC_METHODS = {"item", "block_until_ready"}
+_SPAN_METHODS = {"complete", "instant", "span", "begin", "end"}
+_METRIC_FACTORIES = {"counter", "gauge", "histogram"}
+
+
+def _function_tables(tree: ast.Module, class_name: str):
+    """(module-level functions, methods of ``class_name``) by name."""
+    funcs = {n.name: n for n in tree.body
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    methods: dict[str, ast.FunctionDef] = {}
+    for n in tree.body:
+        if isinstance(n, ast.ClassDef) and n.name == class_name:
+            for m in n.body:
+                if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    methods[m.name] = m
+    return funcs, methods
+
+
+def _reachable(funcs: dict, methods: dict, seeds) -> dict:
+    """BFS the static call graph: ``self.x(...)`` edges into methods,
+    bare-name calls into same-module functions.  External calls (model,
+    scheduler, jitted functions) are boundaries — the jaxpr audit owns
+    what happens inside the jit."""
+    seen: dict[str, ast.FunctionDef] = {}
+    frontier = [s for s in seeds if s in methods or s in funcs]
+    while frontier:
+        name = frontier.pop()
+        if name in seen:
+            continue
+        fn = methods.get(name, funcs.get(name))
+        seen[name] = fn
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if (isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "self" and f.attr in methods):
+                frontier.append(f.attr)
+            elif isinstance(f, ast.Name) and f.id in funcs:
+                frontier.append(f.id)
+    return seen
+
+
+def _span_guarded(path_to_node: list) -> bool:
+    """Whether any enclosing ``if`` on the way to the node tests
+    ``*.enabled`` (the sanctioned hot-path span guard).  Only the taken
+    branch counts: ``if tracer.enabled: ...`` guards its body, not its
+    ``else``."""
+    for anc, child in zip(path_to_node, path_to_node[1:]):
+        if isinstance(anc, ast.If) and child in anc.body:
+            if any(isinstance(t, ast.Attribute) and t.attr == "enabled"
+                   for t in ast.walk(anc.test)):
+                return True
+    return False
+
+
+def _walk_with_path(node: ast.AST, path=()):
+    yield path + (node,)
+    for child in ast.iter_child_nodes(node):
+        yield from _walk_with_path(child, path + (node,))
+
+
+def lint_hot_path(source: str, path: str, *,
+                  class_name: str = HOT_PATH_CLASS,
+                  seeds=HOT_PATH_SEEDS) -> list:
+    """``hot-path-host-sync`` + ``unguarded-span`` over one file's
+    hot-path reachable set."""
+    tree = ast.parse(source)
+    allows = allowed_lines(source)
+    funcs, methods = _function_tables(tree, class_name)
+    findings = []
+    for fname, fn in _reachable(funcs, methods, seeds).items():
+        for node_path in _walk_with_path(fn):
+            node = node_path[-1]
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            is_sync = (chain in _SYNC_CALLS
+                       or (isinstance(node.func, ast.Attribute)
+                           and node.func.attr in _SYNC_METHODS))
+            if is_sync and not _is_allowed(node, allows, "host-sync"):
+                what = chain or f".{node.func.attr}()"
+                findings.append(Finding(
+                    "hot-path-host-sync", SEVERITY_ERROR, path, node.lineno,
+                    f"{what} in {fname}() (reachable from the decode/"
+                    f"prefill chunk loop) forces a device sync; the chunk "
+                    f"loop is one-sync-per-chunk — annotate "
+                    f"'# analysis: allow-host-sync(reason)' if intended"))
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _SPAN_METHODS
+                    and ".tracer" in f".{chain}"
+                    and not _span_guarded(node_path)
+                    and not _is_allowed(node, allows, "unguarded-span")):
+                findings.append(Finding(
+                    "unguarded-span", SEVERITY_WARNING, path, node.lineno,
+                    f"tracer.{node.func.attr}() in hot-path {fname}() is "
+                    f"not behind a tracer.enabled guard — null-tracer "
+                    f"overhead is CI-bounded only because spans hide "
+                    f"behind one enabled check"))
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _METRIC_FACTORIES
+                    and ("metrics" in chain or "registry" in chain)
+                    and not _is_allowed(node, allows, "unguarded-span")):
+                findings.append(Finding(
+                    "unguarded-span", SEVERITY_WARNING, path, node.lineno,
+                    f"metric child creation ({chain}) in "
+                    f"hot-path {fname}() — resolve children once in "
+                    f"attach_obs and pay a float add in the loop, not a "
+                    f"registry lookup"))
+    return findings
+
+
+# -- wall-clock-latency ------------------------------------------------------
+
+def lint_wall_clock(source: str, path: str) -> list:
+    tree = ast.parse(source)
+    allows = allowed_lines(source)
+    findings = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and _attr_chain(node.func) == "time.time"
+                and not _is_allowed(node, allows, "wall-clock")):
+            findings.append(Finding(
+                "wall-clock-latency", SEVERITY_WARNING, path, node.lineno,
+                "time.time() is wall clock (NTP slews corrupt duration "
+                "samples) — use time.perf_counter()/time.monotonic() for "
+                "durations, or annotate "
+                "'# analysis: allow-wall-clock(reason)' for a genuine "
+                "timestamp"))
+    return findings
+
+
+# -- wire-compat -------------------------------------------------------------
+
+def _literal_int(node) -> int | None:
+    return node.value if (isinstance(node, ast.Constant)
+                          and isinstance(node.value, int)) else None
+
+
+def _literal_int_set(node) -> set | None:
+    """Ints of ``{1, 2, 3}`` / ``frozenset({1, 2, 3})`` / ``frozenset((…))``
+    literals; None when the expression is anything else."""
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in ("frozenset", "set") and node.args):
+        node = node.args[0]
+    if isinstance(node, (ast.Set, ast.Tuple, ast.List)):
+        vals = [_literal_int(e) for e in node.elts]
+        if all(v is not None for v in vals):
+            return set(vals)
+    return None
+
+
+def lint_wire_compat(source: str, path: str) -> list:
+    tree = ast.parse(source)
+    version = compat = None
+    version_line = 0
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            name = node.targets[0].id
+            if name == "WIRE_VERSION":
+                version = _literal_int(node.value)
+                version_line = node.lineno
+            elif name == "WIRE_COMPAT":
+                compat = _literal_int_set(node.value)
+    if version is None:
+        return []
+    if compat is None:
+        return [Finding(
+            "wire-compat", SEVERITY_ERROR, path, version_line,
+            f"WIRE_VERSION = {version} without a literal WIRE_COMPAT set "
+            f"in the same module — readers cannot know which versions "
+            f"decode safely")]
+    if version not in compat:
+        return [Finding(
+            "wire-compat", SEVERITY_ERROR, path, version_line,
+            f"WIRE_VERSION = {version} is not in WIRE_COMPAT "
+            f"{sorted(compat)} — a version bump requires a matching "
+            f"compat-set edit (every writer must read its own payloads)")]
+    return []
+
+
+# -- kernel-triad ------------------------------------------------------------
+
+_TRIAD = ("kernel.py", "ops.py", "ref.py")
+
+
+def lint_kernel_triad(root: str,
+                      kernels_rel: str = "src/repro/kernels",
+                      tests_rel: str = "tests/test_kernels.py") -> list:
+    kdir = os.path.join(root, kernels_rel)
+    if not os.path.isdir(kdir):
+        return []
+    try:
+        with open(os.path.join(root, tests_rel)) as f:
+            test_text = f.read()
+    except FileNotFoundError:
+        test_text = ""
+    findings = []
+    for name in sorted(os.listdir(kdir)):
+        pkg = os.path.join(kdir, name)
+        if (not os.path.isdir(pkg)
+                or not os.path.isfile(os.path.join(pkg, "__init__.py"))):
+            continue
+        rel = f"{kernels_rel}/{name}"
+        for part in _TRIAD:
+            if not os.path.isfile(os.path.join(pkg, part)):
+                findings.append(Finding(
+                    "kernel-triad", SEVERITY_ERROR, rel, 0,
+                    f"kernel package {name!r} is missing {part} — every "
+                    f"kernel ships the kernel/ops/ref triad so the Pallas "
+                    f"path always has a jnp oracle"))
+        ops = os.path.join(pkg, "ops.py")
+        if os.path.isfile(ops):
+            with open(ops) as f:
+                ops_tree = ast.parse(f.read())
+            # either surface is fine: a force_pallas() context manager
+            # (trace-time ops) or a force_pallas= kwarg (jitted ops)
+            has_force = any(
+                isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and (n.name == "force_pallas"
+                     or any(a.arg == "force_pallas"
+                            for a in (n.args.args + n.args.kwonlyargs)))
+                for n in ast.walk(ops_tree))
+            if not has_force:
+                findings.append(Finding(
+                    "kernel-triad", SEVERITY_ERROR, f"{rel}/ops.py", 0,
+                    f"kernel package {name!r} ops.py exposes no "
+                    f"force_pallas surface (context manager or kwarg) — "
+                    f"off-TPU validation cannot exercise the Pallas path"))
+        if name not in test_text:
+            findings.append(Finding(
+                "kernel-triad", SEVERITY_ERROR, rel, 0,
+                f"no {tests_rel} case names kernel package {name!r} — "
+                f"every kernel needs a kernel-vs-ref parity test"))
+    return findings
+
+
+# -- driver ------------------------------------------------------------------
+
+#: Directories (repo-relative) the per-file rules sweep.  Tests are
+#: excluded by design: fixture snippets there deliberately violate rules.
+DEFAULT_ROOTS = ("src/repro", "benchmarks", "examples")
+
+
+def iter_py_files(root: str, rel_dirs=DEFAULT_ROOTS):
+    for rel in rel_dirs:
+        top = os.path.join(root, rel)
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fname in sorted(filenames):
+                if fname.endswith(".py"):
+                    full = os.path.join(dirpath, fname)
+                    yield full, os.path.relpath(full, root).replace(
+                        os.sep, "/")
+
+
+def run_lint(root: str, rel_dirs=DEFAULT_ROOTS) -> list:
+    """All layer-1 rules over the tree rooted at ``root``."""
+    findings = []
+    for full, rel in iter_py_files(root, rel_dirs):
+        with open(full) as f:
+            source = f.read()
+        try:
+            findings += lint_wall_clock(source, rel)
+            findings += lint_wire_compat(source, rel)
+            if rel == HOT_PATH_FILE:
+                findings += lint_hot_path(source, rel)
+        except SyntaxError as e:
+            findings.append(Finding(
+                "parse-error", SEVERITY_ERROR, rel, e.lineno or 0,
+                f"file does not parse: {e.msg}"))
+    findings += lint_kernel_triad(root)
+    return findings

@@ -90,7 +90,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
     chips = mesh.devices.size
     dpp = devices_per_pod(mesh)
     kind = SHAPES[shape]["kind"]
-    t0 = time.time()
+    t0 = time.perf_counter()
     if cfg_overrides:
         cfg = dataclasses.replace(cfg, **cfg_overrides)
 
@@ -137,9 +137,9 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
                         param_shapes, batch_shapes["token"],
                         jnp.asarray(S - 1, jnp.int32), cache_shapes)
 
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     print(mem)                                    # proves it fits
@@ -148,9 +148,9 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
     print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
     # XLA's cost_analysis counts while bodies once; the walker multiplies by
     # known_trip_count and accounts collectives (see hlo_cost docstring)
-    t0w = time.time()
+    t0w = time.perf_counter()
     totals = hlo_cost.analyze(compiled.as_text(), devices_per_pod=dpp)
-    t_walk = time.time() - t0w
+    t_walk = time.perf_counter() - t0w
     peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
             + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
     rf = roofline.build_from_walker(arch, shape, mesh_kind, chips, totals,

@@ -83,7 +83,7 @@ def run(argv=None) -> dict:
         seq_len=args.seq_len, seed=args.seed), start_step=start_step)
 
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()        # duration base, not a timestamp
     for i in range(start_step, args.steps):
         batch_np = data.batch_at(i)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
@@ -101,7 +101,7 @@ def run(argv=None) -> dict:
         losses.append(loss)
         if i % args.log_every == 0 or i == args.steps - 1:
             tps = args.global_batch * args.seq_len / max(
-                1e-9, (time.time() - t0) / max(1, len(losses)))
+                1e-9, (time.perf_counter() - t0) / max(1, len(losses)))
             print(f"step {i:5d} loss {loss:.4f} "
                   f"grad_norm {float(metrics['grad_norm']):.3f} "
                   f"tok/s {tps:,.0f}", flush=True)

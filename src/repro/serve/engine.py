@@ -376,7 +376,8 @@ class ServeEngine:
         if not self.prefilling:
             return
         pf = self.prefilling[0]
-        prompt = np.asarray(pf.req.prompt)
+        # host-side prompt tokens, never a device value — no sync happens
+        prompt = np.asarray(pf.req.prompt)  # analysis: allow-host-sync(prompt is host numpy, no device transfer)
         C = self.prefill_chunk_tokens
         qlen = min(C, len(prompt) - pf.consumed)
         t0 = time.perf_counter()
@@ -628,24 +629,34 @@ class ServeEngine:
             return 0
         d = self.scheduler.schedule_decode(group=0)
         t0 = time.perf_counter()
+        if self._dev_dirty or self._dev_tok is None:
+            # both paths keep cur_token/pos device-resident between steps;
+            # this re-upload runs only after a slot-changing event
+            # (admission, finish, export) marked them dirty
+            self._dev_tok = jnp.asarray(self.cur_token)
+            self._dev_pos = jnp.asarray(self.pos)
+            self._dev_dirty = False
         if self.fused:
             k = self.decode_chunk
-            if self._dev_dirty or self._dev_tok is None:
-                self._dev_tok = jnp.asarray(self.cur_token)
-                self._dev_pos = jnp.asarray(self.pos)
-                self._dev_dirty = False
             toks_dev, self._dev_tok, self._dev_pos, self.cache = (
                 self._decode_fused(self.params, self._dev_tok, self._dev_pos,
                                    self.cache, k))
-            toks = np.asarray(toks_dev)          # the chunk's ONE host sync
+            # the chunk's ONE host sync: a (B, k) block of token ids
+            toks = np.asarray(toks_dev)  # analysis: allow-host-sync(the one sanctioned sync per decode chunk)
         else:
-            # legacy per-token path (A/B baseline): undonated decode, the
-            # full logits row crosses to host, argmax there
+            # legacy per-step path (A/B baseline): undonated decode, but
+            # cur_token/pos stay device-resident with the same dirty-resync
+            # scheme as the fused path — argmax runs on device and only the
+            # (B, 1) token ids cross to host, not the full logits row plus
+            # a cur_token re-upload every step
             k = 1
             logits, self.cache = self._decode(
-                self.params, jnp.asarray(self.cur_token),
-                jnp.asarray(self.pos), self.cache)
-            toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))[:, None]
+                self.params, self._dev_tok, self._dev_pos, self.cache)
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+            self._dev_tok = nxt
+            self._dev_pos = self._dev_pos + 1
+            # the step's ONE host sync: the (B, 1) block of token ids
+            toks = np.asarray(nxt)  # analysis: allow-host-sync(the one sanctioned sync per legacy step)
         decode_elapsed = time.perf_counter() - t0
         self.scheduler.record(d, decode_elapsed, time.perf_counter())
         if self.tracer.enabled:
@@ -673,9 +684,9 @@ class ServeEngine:
                     self._dev_dirty = True
                     self._finish(req)
                     break
-        if self.fused and any(r is None for r in self.active):
-            # keep idle slots' device pos pinned at 0: the fused scan
-            # advances every slot's pos unconditionally, so without this
+        if any(r is None for r in self.active):
+            # keep idle slots' device pos pinned at 0: both paths advance
+            # every slot's device pos unconditionally, so without this
             # re-sync a long-idle slot's garbage decode would creep across
             # the whole cache and end up attending (and, on TPU, DMA'ing)
             # all of Smax every chunk — two tiny int32 uploads per step

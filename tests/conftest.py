@@ -11,6 +11,11 @@ import textwrap
 
 import pytest
 
+# fixtures/ holds broken-on-purpose trees for the analysis suite — some
+# files deliberately do not parse, and fixture test_kernels.py stubs would
+# basename-collide with the real ones
+collect_ignore = ["fixtures"]
+
 
 def run_subprocess(code: str, devices: int = 8) -> str:
     """Run `code` in a fresh python with N fake host devices; assert rc==0."""

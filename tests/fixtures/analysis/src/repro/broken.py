@@ -1,0 +1,1 @@
+def f(:   # deliberately unparsable: parse-error finding

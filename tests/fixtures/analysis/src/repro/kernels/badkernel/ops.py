@@ -1,0 +1,8 @@
+"""No ref.py next door, no force_pallas surface: two kernel-triad
+findings (plus a third for the missing parity test)."""
+
+from .kernel import badkernel_pallas
+
+
+def badkernel_op(x):
+    return badkernel_pallas(x)

@@ -1,0 +1,2 @@
+def goodkernel_pallas(x):
+    return x

@@ -1,0 +1,8 @@
+"""Complete triad with a force_pallas kwarg: must stay finding-free."""
+
+from .kernel import goodkernel_pallas
+from .ref import goodkernel_ref
+
+
+def goodkernel_op(x, *, force_pallas: bool = False):
+    return goodkernel_pallas(x) if force_pallas else goodkernel_ref(x)

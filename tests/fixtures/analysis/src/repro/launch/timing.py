@@ -1,0 +1,12 @@
+"""Wall-clock durations: two findings, one annotated timestamp (clean)."""
+
+import time
+
+
+def measure():
+    t0 = time.time()
+    return time.time() - t0
+
+
+def stamp():
+    return time.time()  # analysis: allow-wall-clock(manifest timestamp, not a duration)

@@ -1,0 +1,4 @@
+"""Version bumped without the matching compat-set edit: wire-compat."""
+
+WIRE_VERSION = 4
+WIRE_COMPAT = frozenset({1, 2, 3})

@@ -1,0 +1,30 @@
+"""Broken-on-purpose hot-path fixture.  Every violation below has a
+matching entry in tests/golden/analysis_findings.json; the guarded /
+annotated sites must stay finding-free."""
+
+import numpy as np
+
+import jax
+
+
+class ServeEngine:
+    def __init__(self, tracer, metrics):
+        self.tracer = tracer
+        self.metrics = metrics
+
+    def step(self):
+        toks = self._decode_chunk()
+        bad = np.asarray(toks)                   # unannotated sync: finding
+        n = bad.sum().item()                     # .item() sync: finding
+        self.tracer.instant("decode-chunk", n)   # unguarded span: finding
+        if self.tracer.enabled:
+            self.tracer.instant("guarded", n)    # guarded: clean
+        self.metrics.counter("steps", "d").inc()  # registry in loop: finding
+        ok = np.asarray(toks)  # analysis: allow-host-sync(fixture's one sanctioned sync)
+        return ok
+
+    def _decode_chunk(self):
+        return [1]
+
+    def _advance_prefill(self):
+        return jax.device_get(self._decode_chunk())   # sync: finding

@@ -1,0 +1,3 @@
+# fixture parity-test stub: names goodkernel only, so badkernel draws a
+# kernel-triad finding.  (Never collected: tests/fixtures is collect-ignored.)
+KERNELS_WITH_PARITY_TESTS = ["goodkernel"]

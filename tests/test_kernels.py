@@ -11,6 +11,10 @@ from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.matmul.kernel import matmul_pallas
 from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.ragged_decode import ops as ragged_decode_ops
+from repro.kernels.ragged_decode.ref import ragged_decode_ref
+from repro.kernels.ragged_prefill import ops as ragged_prefill_ops
+from repro.kernels.ragged_prefill.ref import ragged_prefill_ref
 from repro.kernels.stream_copy.kernel import (stream_copy_pallas,
                                               stream_scale_add_pallas)
 from repro.kernels.stream_copy.ref import stream_scale_add_ref
@@ -84,6 +88,45 @@ def test_stream_sweep(n, block, dtype):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(ref, np.float32),
                                rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Smax,hd,bk", [
+    (2, 4, 2, 64, 32, 32),       # GQA rep 2
+    (3, 4, 4, 96, 16, 48),       # MHA, uneven block
+])
+def test_ragged_decode_parity(B, Hq, Hkv, Smax, hd, bk):
+    """Pallas ragged decode attention (interpret mode, via force_pallas)
+    matches the jnp oracle at mixed per-slot positions."""
+    q = jnp.asarray(RNG.standard_normal((B, Hq, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Smax, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Smax, Hkv, hd)), jnp.float32)
+    pos = jnp.asarray(RNG.integers(0, Smax, (B,)), jnp.int32)
+    with ragged_decode_ops.force_pallas():
+        got = ragged_decode_ops.ragged_decode_attention(q, k, v, pos,
+                                                        block_k=bk)
+    ref = ragged_decode_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,T,Hq,Hkv,Smax,hd,bk", [
+    (2, 8, 4, 2, 64, 32, 32),    # GQA rep 2
+    (2, 4, 2, 2, 48, 16, 48),    # MHA, partial chunks
+])
+def test_ragged_prefill_parity(B, T, Hq, Hkv, Smax, hd, bk):
+    """Pallas chunked ragged prefill attention (interpret mode) matches the
+    jnp oracle with per-slot chunk origins and ragged live lengths."""
+    q = jnp.asarray(RNG.standard_normal((B, T, Hq, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Smax, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Smax, Hkv, hd)), jnp.float32)
+    start = jnp.asarray(RNG.integers(0, Smax - T, (B,)), jnp.int32)
+    qlen = jnp.asarray(RNG.integers(1, T + 1, (B,)), jnp.int32)
+    with ragged_prefill_ops.force_pallas():
+        got = ragged_prefill_ops.ragged_prefill_attention(q, k, v, start,
+                                                          qlen, block_k=bk)
+    ref = ragged_prefill_ref(q, k, v, start, qlen)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-4)
 
 
 @pytest.mark.parametrize("S,qb", [(64, 16), (128, 32)])
