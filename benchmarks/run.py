@@ -12,12 +12,14 @@ import sys
 import traceback
 
 from . import common
-from . import (disagg_serving, fig5_heatmap, fig6_kernels, fig7_speedup,
-               fig8_interference, fig9_vgg_scaling, fig10_widths,
-               fleet_routing, kernel_bench, obs_overhead, pod_serving,
-               pod_straggler, region_routing, roofline, serve_decode)
+from . import (chaos_serving, disagg_serving, fig5_heatmap, fig6_kernels,
+               fig7_speedup, fig8_interference, fig9_vgg_scaling,
+               fig10_widths, fleet_routing, kernel_bench, obs_overhead,
+               pod_serving, pod_straggler, region_routing, roofline,
+               serve_decode)
 
 MODULES = (
+    ("chaos_serving", chaos_serving),
     ("disagg_serving", disagg_serving),
     ("fig5_heatmap", fig5_heatmap),
     ("fig6_kernels", fig6_kernels),

@@ -26,6 +26,14 @@ Every rule here encodes an invariant a past PR paid for in benchmarks:
   ``ops.py`` (context manager or kwarg), and a ``tests/test_kernels.py``
   case naming the package, so no kernel exists without an oracle and a
   parity test.
+* ``bare-retry`` — PR 9's chaos plane proved every delivery failure is
+  survivable *because* retries are bounded and spread out: a ``while``
+  loop that swallows an exception and goes around again (``except: ...
+  continue``/``pass``) with no backoff, jitter, or exhaustion exit
+  hammers a failing dependency in lockstep with every other retrying
+  sender.  ``for _ in range(n)`` loops are structurally capped and never
+  flagged; see :class:`repro.chaos.ReliableTransport` for the sanctioned
+  shape.
 
 Intended one-off violations are annotated in-source on the offending
 line::
@@ -33,7 +41,7 @@ line::
     toks = np.asarray(toks_dev)   # analysis: allow-host-sync(reason)
 
 Annotation tokens: ``allow-host-sync``, ``allow-wall-clock``,
-``allow-unguarded-span``.
+``allow-unguarded-span``, ``allow-bare-retry``.
 """
 
 from __future__ import annotations
@@ -269,6 +277,77 @@ def lint_wire_compat(source: str, path: str) -> list:
     return []
 
 
+# -- bare-retry --------------------------------------------------------------
+
+_BACKOFF_HINTS = ("backoff", "jitter")
+
+
+def _swallow_handlers(loop: ast.While) -> list:
+    """Except handlers inside ``loop`` whose body ends in ``continue`` or
+    ``pass`` — the failure is absorbed and the loop just goes around
+    again.  Handlers inside a NESTED loop belong to that loop, not this
+    one."""
+    out = []
+    stack: list[ast.AST] = list(loop.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.While, ast.For, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            continue
+        if isinstance(node, ast.Try):
+            for h in node.handlers:
+                if isinstance(h.body[-1], (ast.Continue, ast.Pass)):
+                    out.append(h)
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+def _has_retry_discipline(loop: ast.While) -> bool:
+    """Any signal that the retry loop is bounded or spread out: a name
+    mentioning backoff/jitter, geometric growth (``*=``/``**=``), or a
+    ``raise`` that gives the loop an exhaustion exit."""
+    for node in ast.walk(loop):
+        if isinstance(node, ast.Name) and any(
+                h in node.id.lower() for h in _BACKOFF_HINTS):
+            return True
+        if isinstance(node, ast.Attribute) and any(
+                h in node.attr.lower() for h in _BACKOFF_HINTS):
+            return True
+        if isinstance(node, ast.AugAssign) and isinstance(
+                node.op, (ast.Mult, ast.Pow)):
+            return True
+        if isinstance(node, ast.Raise):
+            return True
+    return False
+
+
+def lint_bare_retry(source: str, path: str) -> list:
+    tree = ast.parse(source)
+    allows = allowed_lines(source)
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.While):
+            continue
+        handlers = _swallow_handlers(node)
+        if not handlers or _has_retry_discipline(node):
+            continue
+        for h in handlers:
+            if (_is_allowed(h, allows, "bare-retry")
+                    or _is_allowed(node, {node.lineno: allows.get(
+                        node.lineno, set())}, "bare-retry")):
+                continue
+            findings.append(Finding(
+                "bare-retry", SEVERITY_WARNING, path, h.lineno,
+                "retry loop swallows the failure and goes around again "
+                "with no backoff, jitter, or attempt cap — N such senders "
+                "re-collide in lockstep; use capped exponential backoff "
+                "with jitter (repro.chaos.ReliableTransport is the "
+                "sanctioned shape), a bounded 'for ... in range(n)' "
+                "loop, or annotate "
+                "'# analysis: allow-bare-retry(reason)'"))
+    return findings
+
+
 # -- kernel-triad ------------------------------------------------------------
 
 _TRIAD = ("kernel.py", "ops.py", "ref.py")
@@ -353,6 +432,7 @@ def run_lint(root: str, rel_dirs=DEFAULT_ROOTS) -> list:
         try:
             findings += lint_wall_clock(source, rel)
             findings += lint_wire_compat(source, rel)
+            findings += lint_bare_retry(source, rel)
             if rel == HOT_PATH_FILE:
                 findings += lint_hot_path(source, rel)
         except SyntaxError as e:

@@ -82,6 +82,9 @@ class SyntheticLMData:
                 self._q.put((step, self.batch_at(step)), timeout=0.2)
                 step += 1
             except queue.Full:
+                # analysis: allow-bare-retry(the blocking put's 0.2s
+                # timeout already paces this loop — Full just means the
+                # consumer is behind, and the retry IS the backpressure)
                 continue
 
     def __next__(self) -> dict[str, np.ndarray]:

@@ -16,13 +16,15 @@ cross-region without in-process object handoff.
 from ..core.tracetable import WanCost
 from .gateway import RegionGateway
 from .router import RegionDecision, RegionRouter
-from .transport import LoopbackTransport, Transport
+from .transport import (DeliveryError, LoopbackTransport, ShipDropped,
+                        Transport, TransportError)
 from .wire import (WIRE_COMPAT, WIRE_MAGIC, WIRE_VERSION, WireFormatError,
-                   decode_session, encode_session, wire_header)
+                   decode_session, encode_session, verify_crc, wire_header)
 
 __all__ = [
     "RegionDecision", "RegionGateway", "RegionRouter",
-    "LoopbackTransport", "Transport", "WanCost",
+    "DeliveryError", "LoopbackTransport", "ShipDropped", "Transport",
+    "TransportError", "WanCost",
     "WIRE_COMPAT", "WIRE_MAGIC", "WIRE_VERSION", "WireFormatError",
-    "decode_session", "encode_session", "wire_header",
+    "decode_session", "encode_session", "verify_crc", "wire_header",
 ]

@@ -42,8 +42,9 @@ from ..obs import BYTE_BUCKETS, NULL_TRACER
 from ..router.gateway import FleetGateway
 from ..serve.engine import Request, Session
 from .router import RegionDecision, RegionRouter
-from .transport import LoopbackTransport, Transport
-from .wire import decode_session, encode_session
+from .transport import (DeliveryError, LoopbackTransport, ShipDropped,
+                        Transport)
+from .wire import WireFormatError, decode_session, encode_session
 
 
 class RegionGateway:
@@ -71,6 +72,16 @@ class RegionGateway:
         self._wan_bytes = 0                      # wire bytes on links
         self._raw_bytes = 0                      # pre-compression cache bytes
         self._stay_home = 0                      # drain exports skipped
+        # exactly-once machinery: every export of a rid gets a fresh
+        # monotonic epoch in its (origin, rid, epoch) delivery id; the
+        # adoption path records ids it has seen so a duplicated delivery
+        # (a retransmission race the transport surfaces via
+        # take_duplicates) is recognized and dropped, never double-adopted
+        self._epoch: dict[int, int] = {}
+        self._delivered: set[tuple] = set()
+        self._delivery_failures = 0              # retry budget exhausted
+        self._dups_deduped = 0
+        self._dups_dropped = 0                   # undecodable duplicates
         # observability (attach_obs): null tracer / no registry by default
         self.tracer = NULL_TRACER
         self.metrics = None
@@ -157,12 +168,43 @@ class RegionGateway:
     def _ship_session(self, sess: Session, src: int, dst: int) -> None:
         t0 = self.clock()
         self._raw_bytes += session_nbytes(sess.cache)
+        # stamp the exactly-once delivery id before encoding: same rid,
+        # new epoch per export attempt — a retried/duplicated delivery of
+        # THIS export re-presents the same id and dedups; a later re-export
+        # (after a failed delivery) presents a fresh epoch and adopts
+        epoch = self._epoch.get(sess.req.rid, -1) + 1
+        self._epoch[sess.req.rid] = epoch
+        sess.delivery = (src, sess.req.rid, epoch)
         data = encode_session(sess)
-        delivered = self.transport.ship(data, src, dst)
-        rtt = self.transport.last_rtt_s
+        try:
+            delivered, rtt = self.transport.ship(data, src, dst)
+        except (DeliveryError, ShipDropped):
+            # retry budget exhausted (or, with no reliable layer, the one
+            # attempt was lost): the session never left our hands —
+            # degrade by parking it back on its source fleet, where it
+            # drains slowly but is never lost
+            self._delivery_failures += 1
+            self.fleets[src].adopt_session(sess)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "wan-delivery-failed", self.tracer.trace_for(
+                        sess.req.rid), self.obs_name, src=src, dst=dst)
+            return
         if rtt > 0.0:
             self.router.record_rtt(src, dst, rtt, now=self.clock())
-        sess = decode_session(delivered)         # the far side's object
+        try:
+            sess = decode_session(delivered)     # the far side's object
+        except WireFormatError:
+            # delivered but corrupt, with no reliable layer to have
+            # retried it: same degradation as a failed delivery — the
+            # pre-encode object is still in hand, park it on its source
+            self._delivery_failures += 1
+            self.fleets[src].adopt_session(sess)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "wan-delivery-failed", self.tracer.trace_for(
+                        sess.req.rid), self.obs_name, src=src, dst=dst)
+            return
         try:
             self.fleets[dst].adopt_session(sess)
         except ValueError:
@@ -172,6 +214,8 @@ class RegionGateway:
             # the source fleet, where it drains slowly
             self.fleets[src].adopt_session(sess)
             dst = src
+        if sess.delivery is not None:
+            self._delivered.add(tuple(sess.delivery))
         self._handles[sess.req.rid] = sess.req
         if sess.req.rid in self._meta:
             self._meta[sess.req.rid]["fleet"] = dst
@@ -247,6 +291,27 @@ class RegionGateway:
                 shipped += 1
         return shipped
 
+    def _drain_duplicates(self) -> None:
+        """Absorb duplicated deliveries the transport queued (the
+        retransmission race): decode each copy and drop it against the
+        delivery-id registry.  Every duplicate is redundant by
+        construction — the synchronous ship path never abandons a
+        session (a failed delivery parks it back on its source), so the
+        original copy always has a live home and adopting a second one
+        would double-run the rid.  The dedup count is the exactly-once
+        evidence the chaos tests assert on."""
+        take = getattr(self.transport, "take_duplicates", None)
+        if take is None:
+            return
+        for _src, _dst, payload in take():
+            try:
+                sess = decode_session(payload)
+            except WireFormatError:
+                self._dups_dropped += 1          # corrupt copy: ignore
+                continue
+            if sess.delivery is not None:
+                self._dups_deduped += 1
+
     # -- pump --------------------------------------------------------------
     def pump(self) -> int:
         """One region iteration: age stale RTT rows, drain browned-out
@@ -257,6 +322,7 @@ class RegionGateway:
         # pump's WAN moves with its stale RTT
         self.router.age_links(self.clock())
         self._drain_browned_out()
+        self._drain_duplicates()
         active = 0
         for f, gw in enumerate(self.fleets):
             a = gw.pump()
@@ -327,4 +393,7 @@ class RegionGateway:
                 "wan_bytes": self._wan_bytes,
                 "raw_session_bytes": self._raw_bytes,
                 "stay_home_skips": self._stay_home,
+                "delivery_failures": self._delivery_failures,
+                "duplicates_deduped": self._dups_deduped,
+                "duplicates_dropped": self._dups_dropped,
                 "fleet_served": [s["served"] for s in fleet_stats]}

@@ -13,6 +13,11 @@ the payload unchanged within the process, keeps per-link byte/ship
 counters (the egress a :class:`~repro.core.tracetable.WanCost` charges
 for), and can simulate per-link delivery latency so tests and benchmarks
 can train the region router's RTT rows deterministically.
+
+Failure surface: a transport that cannot deliver raises
+:class:`ShipDropped` (one lost/timed-out attempt — retryable) or another
+:class:`TransportError`.  The chaos/reliability decorators
+(:mod:`repro.chaos`) build on exactly this contract.
 """
 
 from __future__ import annotations
@@ -21,28 +26,66 @@ from collections import defaultdict
 from typing import Callable
 
 
+class TransportError(RuntimeError):
+    """A transport-level delivery failure (as opposed to a payload-level
+    :class:`~repro.region.wire.WireFormatError`)."""
+
+
+class ShipDropped(TransportError):
+    """One ship attempt was lost in flight (drop, timeout, partition).
+    Retryable: the sender still holds the payload bytes."""
+
+    def __init__(self, src: int, dst: int, reason: str = "dropped"):
+        super().__init__(f"ship {src}->{dst} {reason}")
+        self.src = src
+        self.dst = dst
+        self.reason = reason
+
+
+class DeliveryError(TransportError):
+    """A whole delivery failed: every attempt in the sender's retry
+    budget was lost or corrupt (raised by
+    :class:`repro.chaos.ReliableTransport` after ``max_attempts``).  The
+    payload never arrived intact — the caller still owns it and must
+    degrade (re-rank the next candidate, else resume locally)."""
+
+    def __init__(self, src: int, dst: int, attempts: int,
+                 cause: Exception):
+        super().__init__(
+            f"delivery {src}->{dst} failed after {attempts} attempts "
+            f"(last: {cause})")
+        self.src = src
+        self.dst = dst
+        self.attempts = attempts
+        self.cause = cause
+
+
 class Transport:
     """Moves one encoded payload from fleet ``src`` to fleet ``dst``.
 
-    ``ship`` returns the bytes as delivered at the destination (a real
-    transport returns what arrived; a simulating one may return the input
-    unchanged) and ``last_rtt_s`` the delivery time of the most recent
-    ship — the sample the region router trains its per-link RTT EMA rows
-    with."""
+    ``ship`` returns ``(payload, rtt_s)``: the bytes as delivered at the
+    destination (a real transport returns what arrived; a simulating one
+    may return the input unchanged) and that ship's delivery time — the
+    sample the region router trains its per-link RTT EMA rows with.
+
+    ``last_rtt_s`` mirrors the most recent ship's RTT and is
+    **deprecated**: two gateways sharing one transport can interleave a
+    ship and the mirror read, attributing one link's delivery time to
+    another.  Read the returned tuple instead."""
 
     last_rtt_s: float = 0.0
 
-    def ship(self, data: bytes, src: int, dst: int) -> bytes:
+    def ship(self, data: bytes, src: int, dst: int) -> tuple[bytes, float]:
         raise NotImplementedError
 
 
 class LoopbackTransport(Transport):
     """In-process delivery with optional simulated link latency.
 
-    ``link_rtt(src, dst) -> seconds`` (when given) stamps ``last_rtt_s``
-    per ship without sleeping — deterministic RTT training for tests and
-    benchmarks.  Without it, ``last_rtt_s`` is 0.0 (an in-process hop is
-    free; real socket transports report measured wall time)."""
+    ``link_rtt(src, dst) -> seconds`` (when given) is returned as each
+    ship's ``rtt_s`` without sleeping — deterministic RTT training for
+    tests and benchmarks.  Without it, the RTT is 0.0 (an in-process hop
+    is free; real socket transports report measured wall time)."""
 
     def __init__(self,
                  link_rtt: Callable[[int, int], float] | None = None):
@@ -58,9 +101,10 @@ class LoopbackTransport(Transport):
     def total_ships(self) -> int:
         return sum(self.ships_by_link.values())
 
-    def ship(self, data: bytes, src: int, dst: int) -> bytes:
+    def ship(self, data: bytes, src: int, dst: int) -> tuple[bytes, float]:
         self.bytes_by_link[(src, dst)] += len(data)
         self.ships_by_link[(src, dst)] += 1
-        self.last_rtt_s = (float(self.link_rtt(src, dst))
-                           if self.link_rtt is not None else 0.0)
-        return data
+        rtt = (float(self.link_rtt(src, dst))
+               if self.link_rtt is not None else 0.0)
+        self.last_rtt_s = rtt        # deprecated mirror (racy when shared)
+        return data, rtt

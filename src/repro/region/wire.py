@@ -44,10 +44,13 @@ WIRE_MAGIC = b"RSES"
 # layout, the new key simply absent.  v3 adds another optional key,
 # "prefilled" (the session left its source mid-prefill with that many
 # prompt tokens consumed — see Session.prefilled), under the same rule:
-# older payloads decode as complete sessions.  Writers always emit the
-# current version; readers accept every version in WIRE_COMPAT.
-WIRE_VERSION = 3
-WIRE_COMPAT = frozenset({1, 2, 3})
+# older payloads decode as complete sessions.  v4 adds the optional
+# "delivery" key — the monotonic ``(origin, rid, epoch)`` delivery id
+# adoption dedups on so a duplicated or retried ship never double-adopts
+# (see Session.delivery) — again purely additive.  Writers always emit
+# the current version; readers accept every version in WIRE_COMPAT.
+WIRE_VERSION = 4
+WIRE_COMPAT = frozenset({1, 2, 3, 4})
 _CODEC_IDS = {"zlib": 0, "zstd": 1}
 _CODEC_NAMES = {v: k for k, v in _CODEC_IDS.items()}
 # magic(4) + version(1) + codec(1) + crc32(4)
@@ -102,6 +105,12 @@ def encode_session(sess: Session, codec: str | None = None) -> bytes:
         # v3's optional partial-prefill marker: the importing engine must
         # resume chunked prefill at this offset, not start decoding
         payload["prefilled"] = int(sess.prefilled)
+    if sess.delivery is not None:
+        # v4's optional delivery id: (origin replica/fleet, rid, epoch) —
+        # a retried or duplicated ship re-delivers the SAME id, so the
+        # adopting gateway can recognize and drop the second copy
+        o, rid, epoch = sess.delivery
+        payload["delivery"] = [int(o), int(rid), int(epoch)]
     body = compress(msgpack.packb(payload, use_bin_type=True), codec)
     header = _HEADER.pack(WIRE_MAGIC, WIRE_VERSION, _CODEC_IDS[codec],
                           zlib.crc32(body) & 0xFFFFFFFF)
@@ -121,8 +130,8 @@ def wire_header(data: bytes) -> dict:
             f"bad magic {magic!r}: not a session wire payload")
     if version not in WIRE_COMPAT:
         # explicit compat set: the CRC covers only the body, so a corrupted
-        # version byte (e.g. 3 -> 0) must fail HERE, not be decoded under
-        # the wrong layout; v1/v2 stay readable (v2 and v3 each only added
+        # version byte (e.g. 4 -> 0) must fail HERE, not be decoded under
+        # the wrong layout; v1-v3 stay readable (v2/v3/v4 each only added
         # an optional key)
         raise WireFormatError(
             f"unsupported session wire version {version} "
@@ -134,6 +143,21 @@ def wire_header(data: bytes) -> dict:
             "nbytes": len(data)}
 
 
+def verify_crc(data: bytes) -> dict:
+    """Header check plus body-CRC check, *without* decoding the body.
+
+    This is the receiver-integrity half of :func:`decode_session`, split
+    out so the reliable-delivery layer (:mod:`repro.chaos.reliable`) can
+    decide delivered-intact vs retry without paying decompression for
+    payloads that will just be resent.  Raises :class:`WireFormatError`
+    on any mismatch; returns the parsed header on success."""
+    h = wire_header(data)
+    if (zlib.crc32(data[_HEADER.size:]) & 0xFFFFFFFF) != h["crc"]:
+        raise WireFormatError("session payload checksum mismatch "
+                              "(truncated or corrupt)")
+    return h
+
+
 def decode_session(data: bytes) -> Session:
     """Reconstruct a session from :func:`encode_session` bytes.
 
@@ -143,11 +167,8 @@ def decode_session(data: bytes) -> Session:
     deserialized from a payload whose checksum doesn't match.  The decoded
     session carries a *new* :class:`Request` object (the sender's handle
     stays frozen at export — cross-boundary identity is the ``rid``)."""
-    h = wire_header(data)
+    h = verify_crc(data)
     body = data[_HEADER.size:]
-    if (zlib.crc32(body) & 0xFFFFFFFF) != h["crc"]:
-        raise WireFormatError("session payload checksum mismatch "
-                              "(truncated or corrupt)")
     try:
         raw = decompress(body, h["codec"])
         payload = msgpack.unpackb(raw, raw=False, strict_map_key=False)
@@ -158,12 +179,15 @@ def decode_session(data: bytes) -> Session:
                               for k, v in r["extras"].items()},
                       out_tokens=list(r["out_tokens"]), done=r["done"],
                       t_first=r["t_first"], t_admit=r["t_admit"])
+        delivery = payload.get("delivery")           # absent pre-v4
         return Session(req=req, pos=payload["pos"],
                        cur_token=payload["cur_token"],
                        cache={k: _unpack_array(v)
                               for k, v in payload["cache"].items()},
                        trace=payload.get("trace"),   # absent on v1 payloads
-                       prefilled=payload.get("prefilled"))  # absent pre-v3
+                       prefilled=payload.get("prefilled"),  # absent pre-v3
+                       delivery=(tuple(delivery) if delivery is not None
+                                 else None))
     except WireFormatError:
         raise
     except RuntimeError as e:

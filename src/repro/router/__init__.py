@@ -10,13 +10,13 @@ from ..core.tracetable import (CostModel, Latency, MigrationCost, Occupancy,
                                QueueAware, TraceTable, WanCost)
 from .admission import Admission, AdmissionController, SLOPolicy
 from .fleet_ptt import FleetPTT
-from .gateway import FleetGateway
+from .gateway import DuplicateDelivery, FleetGateway
 from .interference import InterferenceConfig, InterferenceDetector
 from .router import FleetRouter, RouteDecision
 
 __all__ = [
     "Admission", "AdmissionController", "SLOPolicy",
-    "FleetPTT", "FleetGateway",
+    "DuplicateDelivery", "FleetPTT", "FleetGateway",
     "InterferenceConfig", "InterferenceDetector",
     "FleetRouter", "RouteDecision",
     "CostModel", "Latency", "MigrationCost", "Occupancy", "QueueAware",

@@ -43,12 +43,19 @@ from collections import deque
 from typing import Sequence
 
 from ..core.tracetable import QueueAware
+from ..distributed.elastic import HeartbeatMonitor
 from ..obs import NULL_TRACER
 from ..serve.engine import Request, ServeEngine, Session
 from ..serve.scheduler import RequestClass, classify_request
 from .admission import Admission
 from .fleet_ptt import FleetPTT
 from .router import FleetRouter, RouteDecision
+
+
+class DuplicateDelivery(ValueError):
+    """The session's wire delivery id was already adopted by this fleet:
+    the payload is a duplicated or retried copy of a delivery that
+    completed, and dropping it is the correct (exactly-once) outcome."""
 
 
 @dataclasses.dataclass
@@ -75,12 +82,45 @@ class FleetGateway:
     SHED_CAP = 10_000        # shed requests retained for inspection
 
     def __init__(self, engines: Sequence[ServeEngine],
-                 router: FleetRouter | None = None, clock=time.perf_counter):
+                 router: FleetRouter | None = None, clock=time.perf_counter,
+                 transport=None, injector=None,
+                 heartbeat_timeout: float | None = None):
         if not engines:
             raise ValueError("need at least one engine")
         self.engines = list(engines)
         self.router = router or FleetRouter(len(engines))
         self.clock = clock
+        # chaos plane (all optional; None = PR 7 behavior unchanged):
+        # * transport: prefill->decode handoffs ship their RSES bytes
+        #   through it (and so through any chaos/reliable decorators)
+        #   instead of an in-process encode->decode round trip;
+        # * injector: a FaultInjector whose crash/restart schedule is
+        #   applied to the engines each pump (the gateway owns the
+        #   injector's logical clock — one advance() per pump);
+        # * heartbeat_timeout (in PUMPS, not seconds): wires a
+        #   HeartbeatMonitor to the pump-tick logical clock — live
+        #   engines beat every pump, a crashed one goes silent, and
+        #   after `timeout` silent pumps it is force-quarantined and its
+        #   lost work recovered from the snapshot ledger
+        self.transport = transport
+        self.injector = injector
+        self._pump_count = 0
+        self._hb = (HeartbeatMonitor(len(engines), timeout=heartbeat_timeout,
+                                     now=0.0)
+                    if heartbeat_timeout is not None else None)
+        self._hb_quarantined: set[int] = set()
+        # exactly-once + crash-recovery ledgers (populated only when the
+        # chaos plane is active — see _snapshot_session):
+        # rid -> latest wire snapshot + the replica hosting the session
+        self._snapshots: dict[int, tuple[bytes, int]] = {}
+        self._handles: dict[int, Request] = {}   # rid -> LIVE request
+        self._epoch: dict[int, int] = {}         # rid -> next delivery epoch
+        self._delivered: set[tuple] = set()      # adopted delivery ids
+        self._delivery_failures = 0
+        self._dups_deduped = 0
+        self._crashes_detected = 0
+        self._crash_recovered = 0                # sessions re-placed
+        self._crash_resubmitted = 0              # re-prefilled from scratch
         # only requests still in flight are tracked; finished ones fold
         # into counters and capped collections so a long-lived gateway
         # stays bounded
@@ -233,6 +273,9 @@ class FleetGateway:
         actual outcome: a SHED verdict that displaced a lower-priority held
         request (this one waits in its place) is reported as QUEUE."""
         t_arrival = self.clock()
+        if len(self._handles) >= self.TTFT_CAP:      # evict oldest
+            self._handles.pop(next(iter(self._handles)))
+        self._handles[req.rid] = req
         d = self.router.route(len(req.prompt), req.max_new,
                               affinity=affinity, backlog=self.backlog(),
                               allowed=self._route_allowed())
@@ -248,6 +291,15 @@ class FleetGateway:
             self.held.append((req, affinity, 0, t_arrival))
             d = dataclasses.replace(d, action=Admission.QUEUE)
         return d
+
+    def handle(self, rid: int) -> Request:
+        """The LIVE request object for ``rid``.  Under crash recovery the
+        stream may continue on a wire-decoded copy (or a re-prefilled
+        clone) of the submitter's object — the submitter's original then
+        stays frozen at its pre-crash state, and this map points at
+        whichever object is actually accumulating tokens (the fleet-scale
+        analogue of :meth:`RegionGateway.request`)."""
+        return self._handles[rid]
 
     def _dispatch(self, req: Request, d: RouteDecision,
                   t_arrival: float) -> None:
@@ -322,6 +374,145 @@ class FleetGateway:
         self._displaced_rids.discard(req.rid)    # leaving the gateway
         self._shed_request(req)
         return False
+
+    # -- chaos plane: scheduled faults, heartbeats, crash recovery ---------
+    def _apply_faults(self) -> None:
+        """Advance the injector's logical clock one step and apply its
+        crash/restart schedule to the engines.  The gateway that holds
+        the injector owns its clock: exactly one ``advance`` per pump."""
+        if self.injector is None:
+            return
+        self.injector.advance()
+        for r, e in enumerate(self.engines):
+            dead = self.injector.crashed(r)
+            if dead and not e.crashed:
+                e.crash()
+            elif not dead and e.crashed:
+                e.restart()
+
+    def _check_heartbeats(self) -> None:
+        """Beat every live engine on the pump-tick clock, declare the
+        silent ones dead, and recover their lost work.  A replica beating
+        again after a restart rejoins the monitor here; *readmission* to
+        routing stays the interference detector's call (probe samples),
+        exactly like a drift quarantine."""
+        if self._hb is None:
+            return
+        now = float(self._pump_count)
+        for r, e in enumerate(self.engines):
+            if not e.crashed:
+                self._hb.beat(r, now)
+                if r in self._hb.dead:
+                    self._hb.dead.discard(r)
+                    self._hb_quarantined.discard(r)
+        for r in sorted(self._hb.check(now)):
+            if r in self._hb_quarantined:
+                continue
+            self._hb_quarantined.add(r)
+            self._crashes_detected += 1
+            self.router.detector.force_quarantine(r)
+        # re-run recovery for every dead replica every pump (not just at
+        # detection): work that found no healthy home last pump retries
+        # until one appears — the scan is O(tracked-on-dead-replicas),
+        # which recovery itself drives to zero
+        for r in sorted(self._hb_quarantined):
+            self._recover_crashed(r)
+
+    def _recover_crashed(self, r: int) -> None:
+        """Re-home everything replica ``r`` lost when it crashed.  The
+        engine has no volatile state left (queue, parked imports, KV
+        cache all gone), so recovery works from the gateway's own
+        ledgers: a session with a parked wire snapshot is decoded and
+        re-placed on a healthy decode replica — greedy decode then
+        regenerates the identical token suffix from the snapshot point —
+        and work that never crossed a wire is re-prefilled from scratch
+        as a fresh clone of its request.  Either way the stream continues
+        on a NEW object: :meth:`handle` points at it, the submitter's
+        original stays frozen at its pre-crash state."""
+        from ..region.wire import WireFormatError, decode_session
+        healthy = [h for h in self.router.healthy()
+                   if not self.engines[h].crashed]
+        h_decode = [h for h in healthy if h in set(self._decode_ok)]
+        h_prefill = [h for h in healthy if h in set(self._prefill_ok)]
+        for t in list(self.tracked):
+            if t.replica != r or t.req.done:
+                continue
+            rid = t.req.rid
+            snap = self._snapshots.get(rid)
+            if snap is not None and h_decode:
+                data, _home = snap
+                try:
+                    sess = decode_session(data)
+                except WireFormatError:      # ledger rot: fall through to
+                    sess = None              # the re-prefill path
+                if sess is not None:
+                    dest = None
+                    for cand in self.router.fleet.ranked_search(
+                            int(RequestClass.DECODE), metric=FleetPTT.TPOT,
+                            healthy=h_decode, backlog=self.backlog()):
+                        try:
+                            self.engines[cand].import_session(sess)
+                            dest = cand
+                            break
+                        except ValueError:
+                            continue
+                    if dest is not None:
+                        t.req = sess.req
+                        t.probe = False
+                        t.replica = dest
+                        self._handles[rid] = sess.req
+                        self._per_replica[r] -= 1
+                        self._per_replica[dest] += 1
+                        self._snapshots[rid] = (data, dest)
+                        self._crash_recovered += 1
+                        continue
+            fits = [h for h in h_prefill
+                    if len(t.req.prompt) < self.engines[h].max_seq]
+            if not fits:
+                continue             # nowhere to go yet: retried next pump
+            clone = Request(rid=rid, prompt=t.req.prompt,
+                            max_new=t.req.max_new, tenant=t.req.tenant,
+                            extras=dict(t.req.extras))
+            c = classify_request(len(clone.prompt), clone.max_new)
+            dest = self.router.fleet.global_search(
+                int(c), metric=FleetPTT.TTFT, healthy=fits,
+                backlog=self.backlog(), tokens=len(clone.prompt))
+            self.engines[dest].submit(clone)
+            t.req = clone
+            t.probe = False
+            t.replica = dest
+            self._handles[rid] = clone
+            self._per_replica[r] -= 1
+            self._per_replica[dest] += 1
+            self._crash_resubmitted += 1
+
+    def _snapshot_session(self, rid: int, data: bytes,
+                          replica: int) -> None:
+        """Park a session's wire bytes in the crash-recovery ledger.
+        Only when heartbeat monitoring is on: without crash detection
+        nothing would ever read (or bound) the ledger."""
+        if self._hb is None:
+            return
+        self._snapshots[rid] = (data, replica)
+
+    def _drain_duplicates(self) -> None:
+        """Absorb duplicated deliveries a chaos transport queued (the
+        retransmission race): decode each copy and drop it against the
+        delivery-id registry.  At this tier the synchronous handoff never
+        abandons a payload — a failed delivery walks the candidate ladder
+        with the session still in hand — so a decodable duplicate is
+        always redundant; the dedup count is the exactly-once proof."""
+        take = getattr(self.transport, "take_duplicates", None)
+        if take is None:
+            return
+        from ..region.wire import WireFormatError, decode_session
+        for _src, _dst, payload in take():
+            try:
+                sess = decode_session(payload)
+            except WireFormatError:
+                continue             # corrupt copy: nothing to dedup
+            if sess.delivery is not None:
+                self._dups_deduped += 1
 
     # -- pump --------------------------------------------------------------
     def _retry_held(self) -> None:
@@ -582,7 +773,9 @@ class FleetGateway:
         :meth:`ttft_breakdown` and the handoff histograms."""
         # lazy import: repro.region.gateway imports this module, so a
         # top-level import of the wire codec would cycle at package init
-        from ..region.wire import decode_session, encode_session
+        from ..region.transport import TransportError
+        from ..region.wire import (WireFormatError, decode_session,
+                                   encode_session)
         t0 = self.clock()
         i = self._tracked_index(sess.req.rid)
         t = self.tracked[i] if i is not None else None
@@ -599,30 +792,73 @@ class FleetGateway:
                 "disagg-handoff", RequestClass.DECODE, source=source,
                 rid=sess.req.rid))
         order += [r for r in self._decode_ok if r not in order]
+        rid = sess.req.rid
+        if self.transport is not None:
+            # exactly-once stamp: this export's (origin, rid, epoch) rides
+            # the wire, so a duplicated delivery of it is recognized by
+            # the dedup registry instead of double-adopted
+            epoch = self._epoch.get(rid, -1) + 1
+            self._epoch[rid] = epoch
+            sess.delivery = (source, rid, epoch)
         data = encode_session(sess)
-        shipped = decode_session(data)
-        # the cache crossed the real wire encoding (sized, checksummed,
-        # compressed) — but this tier is in-process, and callers hold the
-        # original Request object, so the decoded copy's handle is swapped
-        # back (cross-PROCESS identity via rid-keyed handles is the region
-        # tier's job, see RegionGateway.request)
-        shipped.req = sess.req
         dest = None
-        for cand in order:
-            if not self.engines[cand].can_hold(shipped.pos, remaining):
-                continue
-            try:
-                self.engines[cand].import_session(shipped)
-            except ValueError:
-                continue
-            dest = cand
-            break
+        if self.transport is None:
+            shipped = decode_session(data)
+            # the cache crossed the real wire encoding (sized, checksummed,
+            # compressed) — but this tier is in-process, and callers hold
+            # the original Request object, so the decoded copy's handle is
+            # swapped back (cross-PROCESS identity via rid-keyed handles is
+            # the region tier's job, see RegionGateway.request)
+            shipped.req = sess.req
+            for cand in order:
+                if not self.engines[cand].can_hold(shipped.pos, remaining):
+                    continue
+                try:
+                    self.engines[cand].import_session(shipped)
+                except ValueError:
+                    continue
+                dest = cand
+                break
+        else:
+            # ship through the (possibly chaos-wrapped, possibly reliable)
+            # transport.  The import succeeding IS the adoption ACK: the
+            # session stays in our hands — parked, never lost — until a
+            # candidate adopts it, and each failed delivery walks the
+            # degradation ladder to the next ranked candidate (resuming on
+            # the source itself is the final rung below)
+            for cand in order:
+                if not self.engines[cand].can_hold(sess.pos, remaining):
+                    continue
+                try:
+                    delivered, _rtt = self.transport.ship(data, source, cand)
+                    shipped = decode_session(delivered)
+                except (TransportError, WireFormatError):
+                    # the link spent its whole delivery budget (or, with
+                    # no reliable layer, delivered corrupt bytes): re-rank
+                    # the next candidate with the payload still in hand
+                    self._delivery_failures += 1
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            "handoff-delivery-failed",
+                            self.tracer.trace_for(rid), self.obs_name,
+                            source=source, dest=cand)
+                    continue
+                shipped.req = sess.req       # in-process tier: same handle
+                try:
+                    self.engines[cand].import_session(shipped)
+                except ValueError:
+                    continue
+                if shipped.delivery is not None:
+                    self._delivered.add(tuple(shipped.delivery))
+                dest = cand
+                break
         if dest is None:
             # nowhere decode-capable fits: finish where it was born — a
             # prefill-role engine still decodes correctly, it just isn't
             # supposed to be good at it
             self.engines[source].import_session(sess, strict=False)
             dest = source
+        self._snapshot_session(rid, data, dest)
         ship = self.clock() - t0
         if t is not None:
             self._per_replica[t.replica] -= 1    # credit follows the work
@@ -752,8 +988,16 @@ class FleetGateway:
         spans ALL replicas, and a session that already crossed the WAN
         must not be dropped because its only fitting host is slow.  The
         TTFT was produced (and recorded) wherever the session was born,
-        so no TTFT sample is harvested here.  Returns the replica; raises
+        so no TTFT sample is harvested here.  Adoption is idempotent on
+        the session's wire delivery id: a duplicated or retried delivery
+        of an already-adopted session raises ``DuplicateDelivery``
+        (exactly-once's receiver half).  Returns the replica; raises
         ValueError when no replica fits."""
+        did = (tuple(sess.delivery) if sess.delivery is not None else None)
+        if did is not None and did in self._delivered:
+            self._dups_deduped += 1
+            raise DuplicateDelivery(
+                f"delivery {did} was already adopted by this fleet")
         remaining = max(sess.req.max_new - len(sess.req.out_tokens), 0)
         # decode-capable hosts only: a prefill-specialized replica has no
         # decode slots, so a WAN-shipped session must never rank onto one
@@ -774,13 +1018,28 @@ class FleetGateway:
                 t_dispatch=now, ttft=0.0))   # pre-harvested: first token
                                              # belongs to the origin fleet
             self._per_replica[dest] += 1
+            if did is not None:
+                self._delivered.add(did)
+            if len(self._handles) >= self.TTFT_CAP:
+                self._handles.pop(next(iter(self._handles)))
+            self._handles[sess.req.rid] = sess.req
+            if self._hb is not None:
+                # crash-recovery ledger: re-encode the adopted session so
+                # a crash of `dest` can re-place it from this snapshot
+                from ..region.wire import encode_session
+                self._snapshots[sess.req.rid] = (encode_session(sess), dest)
             return dest
         raise ValueError("no replica in this fleet can hold the session")
 
     def pump(self) -> int:
-        """One gateway iteration: retry queued, drain quarantined replicas,
-        step every engine, harvest TTFTs.  Returns the number of sequences
-        still active fleet-wide."""
+        """One gateway iteration: apply scheduled faults, check
+        heartbeats (recovering crashed replicas' work), retry queued,
+        drain quarantined replicas, step every engine, harvest TTFTs.
+        Returns the number of sequences still active fleet-wide."""
+        self._pump_count += 1
+        self._apply_faults()
+        self._check_heartbeats()
+        self._drain_duplicates()
         self._retry_held()
         self._migrate_quarantined()
         active = 0
@@ -800,6 +1059,7 @@ class FleetGateway:
                     bd["first_decode_s"] = t.first_decode - t.t_handoff
             if t.req.done and t.ttft is not None:
                 self._served += 1       # finished: stop tracking it
+                self._snapshots.pop(t.req.rid, None)
                 if self._m_served is not None:
                     self._m_served.inc()
             else:
@@ -830,6 +1090,11 @@ class FleetGateway:
         s["migrations"] = self._migrations
         s["roles"] = list(self.roles)
         s["prefill_handoffs"] = self._handoffs
+        s["delivery_failures"] = self._delivery_failures
+        s["duplicates_deduped"] = self._dups_deduped
+        s["crashes_detected"] = self._crashes_detected
+        s["crash_sessions_recovered"] = self._crash_recovered
+        s["crash_requests_resubmitted"] = self._crash_resubmitted
         s["shed_requests"] = [r.rid for r in self.shed]
         s["tenant_shed_debt"] = dict(self._tenant_debt)
         s["per_replica"] = list(self._per_replica)

@@ -87,6 +87,11 @@ class Session:
                                   # (``cur_token`` is meaningless until the
                                   # remaining chunks run; wire v3's optional
                                   # "prefilled" key)
+    delivery: tuple | None = None  # (origin, rid, epoch) delivery id the
+                                   # shipping gateway stamped: adoption
+                                   # dedups on it so a duplicated/retried
+                                   # ship never double-adopts (wire v4's
+                                   # optional "delivery" key)
 
 
 @dataclasses.dataclass
@@ -124,6 +129,9 @@ class ServeEngine:
         # chunkable prefill).
         self.role = role
         self.prefill_chunk_tokens = max(int(prefill_chunk_tokens), 0)
+        # chaos surface: a crashed engine serves nothing until restart()
+        # (see crash() — fault injection / process death stand-in)
+        self.crashed = False
         self.scheduler = ElasticServeScheduler(num_groups)
         self.queue: deque[Request] = deque()
         self.sessions_in: deque[Session] = deque()   # imported, not yet slotted
@@ -233,12 +241,44 @@ class ServeEngine:
             "active": self.active_count(),
             "utilization": self.utilization(),
             "role": self.role,
+            "crashed": self.crashed,
             "prefilling": len(self.prefilling) + len(self._prefill_ready),
         }
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    # -- crash / restart (fault injection surface) -------------------------
+    def crash(self) -> None:
+        """Simulate process death: every piece of volatile state — queued
+        requests, in-flight prefills, imported sessions, the batch cache,
+        all active slots — is lost, exactly as a real crash loses it.
+        The gateway's recovery path (heartbeat death -> parked wire
+        snapshots re-placed, unstarted work resubmitted) is what preserves
+        requests, never engine state.  Idempotent."""
+        self.crashed = True
+        self.queue.clear()
+        self.sessions_in.clear()
+        self.prefilling.clear()
+        self._prefill_ready.clear()
+        self.active = [None] * self.max_batch
+        self.cache = None
+        self.pos[:] = 0
+        self.cur_token[:] = 0
+        self._dev_tok = None
+        self._dev_pos = None
+        self._dev_dirty = True
+
+    def restart(self) -> None:
+        """Bring a crashed engine back empty (a replacement process with
+        the same weights): it can accept work again, holds none.  Work
+        submitted while the engine was dead is discarded here — a fresh
+        process has an empty queue; the gateway's crash recovery already
+        re-homed anything it was tracking."""
+        self.queue.clear()
+        self.sessions_in.clear()
+        self.crashed = False
 
     # -- non-blocking fleet surface ----------------------------------------
     def pending(self) -> int:
@@ -482,7 +522,7 @@ class ServeEngine:
         """Whether a session at ``pos`` with ``remaining`` tokens to decode
         fits this engine without truncation — the one fit rule shared by
         ``import_session`` and migration feasibility pre-checks."""
-        return pos + remaining <= self.max_seq - 1
+        return not self.crashed and pos + remaining <= self.max_seq - 1
 
     def import_session(self, sess: Session, strict: bool = True) -> None:
         """Accept a migrated session; it resumes decoding at the next
@@ -493,6 +533,8 @@ class ServeEngine:
         silently truncate the generation, breaking token identity across
         the migration.  ``strict=False`` is for re-parking a session on its
         source engine, where truncation semantics are unchanged."""
+        if self.crashed:
+            raise ValueError("engine is crashed; restart() before imports")
         if sess.prefilled is not None:
             self._import_partial(sess)
             return
@@ -622,6 +664,8 @@ class ServeEngine:
         ``on_step_latency`` hook report the decode latency **per token**
         (elapsed / chunk), keeping the interference signal comparable
         across chunk sizes."""
+        if self.crashed:
+            return 0                 # a dead process steps nothing
         self._admit()
         self._advance_prefill()      # one chunk, timed on its own signal
         n_active = self.active_count()

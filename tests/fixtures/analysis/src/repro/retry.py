@@ -1,0 +1,58 @@
+"""bare-retry fixture: the hot loop plus its disciplined twins."""
+
+import time
+
+
+def fetch_forever(link):
+    # BAD: swallow-and-spin — no backoff, no jitter, no attempt cap;
+    # every sender retries in lockstep against the failing link
+    while True:
+        try:
+            return link.ship(b"payload")
+        except IOError:
+            continue
+
+
+def fetch_fixed_sleep(link):
+    # BAD too: a constant sleep is still lockstep (no jitter) and still
+    # uncapped — N senders hammer the link in phase every 0.1s forever
+    while True:
+        try:
+            return link.ship(b"payload")
+        except IOError:
+            time.sleep(0.1)
+            continue
+
+
+def fetch_with_backoff(link):
+    # clean: geometric growth + an exhaustion exit bound the loop
+    delay = 0.05
+    while True:
+        try:
+            return link.ship(b"payload")
+        except IOError:
+            if delay > 1.0:
+                raise
+            time.sleep(delay)
+            delay *= 2.0
+            continue
+
+
+def fetch_capped(link):
+    # clean: a for-range loop is structurally capped — never flagged
+    for _ in range(5):
+        try:
+            return link.ship(b"payload")
+        except IOError:
+            continue
+    return None
+
+
+def fetch_intended(link):
+    # annotated: deliberate busy-wait on an in-process queue
+    while True:
+        try:
+            return link.ship(b"payload")
+        except IOError:
+            # analysis: allow-bare-retry(in-process handoff, not a network)
+            continue

@@ -29,8 +29,9 @@ from repro.analysis.jaxpr_audit import (audit_decode_fused,
                                         audit_prefill_chunk,
                                         cache_leaf_names, donation_findings,
                                         jaxpr_findings)
-from repro.analysis.lint import (lint_hot_path, lint_wall_clock,
-                                 lint_wire_compat, run_lint)
+from repro.analysis.lint import (lint_bare_retry, lint_hot_path,
+                                 lint_wall_clock, lint_wire_compat,
+                                 run_lint)
 
 HERE = os.path.dirname(__file__)
 REPO_ROOT = os.path.abspath(os.path.join(HERE, ".."))
@@ -67,7 +68,7 @@ def test_fixture_report_covers_every_rule():
     rules = {f["rule"] for f in report["findings"]}
     assert rules == {"hot-path-host-sync", "unguarded-span",
                      "wall-clock-latency", "wire-compat", "kernel-triad",
-                     "parse-error"}
+                     "bare-retry", "parse-error"}
     assert report["counts"]["new"] == len(report["findings"])
     # the complete triad with a force_pallas kwarg stays finding-free
     assert not any("goodkernel" in f["path"] or "goodkernel" in f["message"]
@@ -125,6 +126,51 @@ def test_wall_clock_rule():
     assert [f.rule for f in fs] == ["wall-clock-latency"]
     ok = "import time\nd = time.perf_counter()\nm = time.monotonic()\n"
     assert lint_wall_clock(ok, "x.py") == []
+
+
+def test_bare_retry_rule():
+    bad = textwrap.dedent("""\
+        while True:
+            try:
+                ship()
+            except IOError:
+                continue
+        """)
+    fs = lint_bare_retry(bad, "x.py")
+    assert [f.rule for f in fs] == ["bare-retry"]
+    assert fs[0].severity == "warning"
+    # geometric backoff + exhaustion raise: disciplined, clean
+    ok = textwrap.dedent("""\
+        delay = 0.1
+        while True:
+            try:
+                ship()
+            except IOError:
+                if delay > 2.0:
+                    raise
+                delay *= 2
+                continue
+        """)
+    assert lint_bare_retry(ok, "x.py") == []
+    # a for-range loop is structurally capped: never flagged
+    capped = textwrap.dedent("""\
+        for _ in range(3):
+            try:
+                ship()
+            except IOError:
+                continue
+        """)
+    assert lint_bare_retry(capped, "x.py") == []
+    # the annotation escape hatch
+    allowed = textwrap.dedent("""\
+        while True:
+            try:
+                ship()
+            except IOError:
+                # analysis: allow-bare-retry(busy-wait on local queue)
+                continue
+        """)
+    assert lint_bare_retry(allowed, "x.py") == []
 
 
 def test_wire_compat_rule():

@@ -110,19 +110,20 @@ def test_wire_rejects_corrupt_and_foreign_payloads():
 
 
 def test_wire_v1_payload_still_decodes():
-    """Backward compat: v2/v3 each only added an optional payload key, so
-    a v1 payload — same layout, version byte 1, no "trace"/"prefilled"
-    keys — must decode unchanged (trace=None, prefilled=None), while
-    versions outside WIRE_COMPAT raise."""
-    assert WIRE_VERSION == 3 and WIRE_COMPAT == frozenset({1, 2, 3})
+    """Backward compat: v2/v3/v4 each only added an optional payload key,
+    so a v1 payload — same layout, version byte 1, no "trace"/"prefilled"/
+    "delivery" keys — must decode unchanged (trace=None, prefilled=None,
+    delivery=None), while versions outside WIRE_COMPAT raise."""
+    assert WIRE_VERSION == 4 and WIRE_COMPAT == frozenset({1, 2, 3, 4})
     sess = _synthetic_session()
     assert sess.trace is None
-    data = bytearray(encode_session(sess))      # v3 writer, no optional
+    data = bytearray(encode_session(sess))      # v4 writer, no optional
     data[4] = 1                                 # keys: byte-identical to a
     out = decode_session(bytes(data))           # v1 writer's output
     assert wire_header(bytes(data))["version"] == 1
     assert out.pos == sess.pos and out.trace is None
     assert out.prefilled is None
+    assert out.delivery is None
     assert out.req.out_tokens == sess.req.out_tokens
     for k in sess.cache:
         assert np.array_equal(out.cache[k], sess.cache[k])

@@ -1,0 +1,166 @@
+"""Property-based fuzzing of the RSES session wire format.
+
+The chaos plane's reliability guarantees rest on one property: any
+mutation of a wire payload — truncation, bit flips, header field
+mutation, or arbitrary foreign bytes — is *detected* and surfaces as
+:class:`WireFormatError`.  Never a crash with a different exception,
+never a hang, never a successfully-decoded-but-wrong session, and (by
+construction — the payload is msgpack) never an unpickle of attacker
+bytes.  These tests drive that property with random mutations via
+``hypothesis`` when installed, else the deterministic shim.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dep: deterministic fallback
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.region.wire import (WIRE_COMPAT, WireFormatError, decode_session,
+                               encode_session, verify_crc, wire_header)
+from repro.serve.engine import Request, Session
+
+
+def _payload(seed=0):
+    rng = np.random.default_rng(seed)
+    req = Request(rid=41, prompt=rng.integers(1, 1000, 9).astype(np.int32),
+                  max_new=7, tenant="fuzz",
+                  out_tokens=[3, 1, 4], t_first=1.25, t_admit=1.0)
+    sess = Session(req=req, pos=12, cur_token=4,
+                   cache={"k": rng.standard_normal((2, 12, 4)).astype(
+                       np.float32),
+                          "v": rng.standard_normal((2, 12, 4)).astype(
+                       np.float32)},
+                   trace={"trace_id": "f0/r1"}, prefilled=None,
+                   delivery=(0, 41, 2))
+    return encode_session(sess)
+
+
+DATA = _payload()
+
+
+def _expect_reject(mutated: bytes) -> None:
+    """The only acceptable outcomes: WireFormatError, or a decode to a
+    session equal to the original (the mutation hit a byte the codec
+    doesn't distinguish — impossible under CRC unless unchanged)."""
+    if mutated == DATA:
+        return                       # identity mutation: nothing to detect
+    with pytest.raises(WireFormatError):
+        decode_session(mutated)
+
+
+# -- deterministic edges -----------------------------------------------------
+
+def test_roundtrip_is_clean():
+    sess = decode_session(DATA)
+    assert sess.req.rid == 41
+    assert sess.delivery == (0, 41, 2)
+    assert verify_crc(DATA)["version"] in WIRE_COMPAT
+
+
+def test_empty_and_tiny_payloads():
+    for n in range(12):              # anything shorter than the header
+        with pytest.raises(WireFormatError):
+            decode_session(DATA[:n])
+
+
+def test_foreign_bytes():
+    with pytest.raises(WireFormatError):
+        decode_session(b"GET / HTTP/1.1\r\n\r\n" + bytes(64))
+    with pytest.raises(WireFormatError):
+        # pickle-looking bytes must be rejected at the magic check, long
+        # before anything could interpret them
+        decode_session(b"\x80\x04\x95" + DATA[3:])
+
+
+# -- random truncation -------------------------------------------------------
+
+@settings(max_examples=60)
+@given(cut=st.integers(min_value=0, max_value=10_000))
+def test_truncation_always_rejected(cut):
+    n = cut % len(DATA)              # every prefix length, header included
+    if n == len(DATA):
+        return
+    _expect_reject(DATA[:n])
+
+
+# -- random bit flips --------------------------------------------------------
+
+@settings(max_examples=120)
+@given(bit=st.integers(min_value=0, max_value=2**31))
+def test_single_bit_flip_always_rejected(bit):
+    b = bit % (len(DATA) * 8)
+    buf = bytearray(DATA)
+    buf[b // 8] ^= 1 << (b % 8)
+    _expect_reject(bytes(buf))
+
+
+@settings(max_examples=40)
+@given(bits=st.lists(st.integers(min_value=0, max_value=2**31),
+                     min_size=2, max_size=16))
+def test_multi_bit_flips_always_rejected(bits):
+    buf = bytearray(DATA)
+    for bit in bits:
+        b = bit % (len(DATA) * 8)
+        buf[b // 8] ^= 1 << (b % 8)
+    _expect_reject(bytes(buf))
+
+
+# -- header mutation ---------------------------------------------------------
+
+@settings(max_examples=60)
+@given(pos=st.integers(min_value=0, max_value=9),
+       val=st.integers(min_value=0, max_value=255))
+def test_header_byte_mutation_always_rejected(pos, val):
+    """Every header byte — magic(0:4), version(4), codec(5), crc(6:10) —
+    set to an arbitrary value either reproduces the original byte or is
+    rejected; a corrupted version byte must never select a wrong-layout
+    decode."""
+    buf = bytearray(DATA)
+    buf[pos] = val
+    _expect_reject(bytes(buf))
+
+
+@settings(max_examples=30)
+@given(version=st.integers(min_value=0, max_value=255))
+def test_unknown_versions_rejected_at_header(version):
+    buf = bytearray(DATA)
+    buf[4] = version
+    if version in WIRE_COMPAT:
+        assert wire_header(bytes(buf))["version"] == version
+        decode_session(bytes(buf))   # optional-key compat: still decodes
+    else:
+        with pytest.raises(WireFormatError):
+            wire_header(bytes(buf))
+
+
+@settings(max_examples=30)
+@given(codec=st.integers(min_value=2, max_value=255))
+def test_unknown_codec_ids_rejected(codec):
+    buf = bytearray(DATA)
+    buf[5] = codec
+    with pytest.raises(WireFormatError):
+        wire_header(bytes(buf))
+
+
+# -- body garbage under a valid header --------------------------------------
+
+@settings(max_examples=30)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_random_body_with_forged_crc_rejected(seed):
+    """Even an attacker who recomputes the CRC over garbage gets a
+    WireFormatError from the codec/msgpack layer, not a crash."""
+    import struct
+    import zlib
+    rng = np.random.default_rng(seed)
+    body = rng.integers(0, 256, rng.integers(1, 200),
+                        dtype=np.uint8).tobytes()
+    hdr = struct.Struct(">4sBBI")
+    magic, ver, codec, _ = hdr.unpack_from(DATA)
+    forged = hdr.pack(magic, ver, codec,
+                      zlib.crc32(body) & 0xFFFFFFFF) + body
+    assert verify_crc(forged)        # CRC matches by construction...
+    with pytest.raises(WireFormatError):
+        decode_session(forged)       # ...but the body still can't decode
