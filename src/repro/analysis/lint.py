@@ -34,6 +34,13 @@ Every rule here encodes an invariant a past PR paid for in benchmarks:
   sender.  ``for _ in range(n)`` loops are structurally capped and never
   flagged; see :class:`repro.chaos.ReliableTransport` for the sanctioned
   shape.
+* ``metric-cardinality`` — every distinct (name, labels) pair is a child
+  the registry keeps forever and the TimeSeriesStore rings per series.
+  A metric *name* built by interpolation, or a label fed from unbounded
+  runtime data (an f-string, ``str()``/``.format()`` of a variable, or a
+  per-request id like ``rid``/``session_id``), grows the registry without
+  bound — ids belong on the tracer (spans are bounded deques), labels
+  name *dimensions* (replica index, fleet, state), not *events*.
 
 Intended one-off violations are annotated in-source on the offending
 line::
@@ -41,7 +48,8 @@ line::
     toks = np.asarray(toks_dev)   # analysis: allow-host-sync(reason)
 
 Annotation tokens: ``allow-host-sync``, ``allow-wall-clock``,
-``allow-unguarded-span``, ``allow-bare-retry``.
+``allow-unguarded-span``, ``allow-bare-retry``,
+``allow-metric-cardinality``.
 """
 
 from __future__ import annotations
@@ -348,6 +356,89 @@ def lint_bare_retry(source: str, path: str) -> list:
     return findings
 
 
+# -- metric-cardinality ------------------------------------------------------
+
+#: Label/value names that are per-event identifiers, not dimensions.
+_ID_NAME_RE = re.compile(
+    r"(?:^|_)(rid|request_id|session_id|trace_id|span_id|tid|uuid)$")
+_STRINGIFY_FUNCS = {"str", "repr", "format", "hex"}
+
+
+def _unbounded_reason(node: ast.AST) -> str | None:
+    """Why a metric-name / label-value expression looks unbounded, or
+    None when it is safely low-cardinality (a literal, or a plain
+    variable whose name is not id-like).  A bare variable is trusted —
+    loop indices over replicas/fleets are the normal label idiom — but
+    anything *stringified or interpolated at the call site* is the
+    telltale of event data being minted into a series."""
+    if isinstance(node, ast.Constant):
+        return None
+    if isinstance(node, ast.JoinedStr):
+        return "an f-string interpolation"
+    if isinstance(node, ast.BinOp) and isinstance(node.op, (ast.Add, ast.Mod)):
+        return "string concatenation/%-formatting"
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in _STRINGIFY_FUNCS:
+            return f"{f.id}() of a runtime value"
+        if isinstance(f, ast.Attribute) and f.attr == "format":
+            return "a .format() interpolation"
+        return None
+    name = (node.id if isinstance(node, ast.Name)
+            else node.attr if isinstance(node, ast.Attribute) else "")
+    if name and _ID_NAME_RE.search(name.lower()):
+        return f"the per-request id {name!r}"
+    return None
+
+
+def _is_metric_factory(node: ast.Call) -> bool:
+    """A ``counter``/``gauge``/``histogram`` call on something that looks
+    like a registry (``metrics.counter``, ``self.registry.gauge``,
+    ``reg.histogram``, ``store.registry.counter``)."""
+    if (not isinstance(node.func, ast.Attribute)
+            or node.func.attr not in _METRIC_FACTORIES):
+        return False
+    chain = _attr_chain(node.func).lower()
+    return any(h in chain for h in ("metric", "registry", "reg."))
+
+
+def lint_metric_cardinality(source: str, path: str) -> list:
+    tree = ast.parse(source)
+    allows = allowed_lines(source)
+    findings = []
+    for node in ast.walk(tree):
+        if (not isinstance(node, ast.Call) or not _is_metric_factory(node)
+                or _is_allowed(node, allows, "metric-cardinality")):
+            continue
+        factory = node.func.attr
+        if node.args:
+            why = _unbounded_reason(node.args[0])
+            if why:
+                findings.append(Finding(
+                    "metric-cardinality", SEVERITY_WARNING, path,
+                    node.lineno,
+                    f"metric name passed to .{factory}() is {why} — every "
+                    f"distinct name is a family kept forever; make the "
+                    f"name a literal and move the variable part into a "
+                    f"label, or annotate "
+                    f"'# analysis: allow-metric-cardinality(reason)'"))
+        for kw in node.keywords:
+            if kw.arg is None:        # **labels splat: opaque, let it pass
+                continue
+            why = _unbounded_reason(kw.value)
+            if why:
+                findings.append(Finding(
+                    "metric-cardinality", SEVERITY_WARNING, path,
+                    kw.value.lineno,
+                    f"label {kw.arg!r} on .{factory}() is fed from {why} — "
+                    f"every distinct value is a child series the registry "
+                    f"(and any TimeSeriesStore ring) keeps forever; labels "
+                    f"name bounded dimensions, per-event ids belong on "
+                    f"the tracer, or annotate "
+                    f"'# analysis: allow-metric-cardinality(reason)'"))
+    return findings
+
+
 # -- kernel-triad ------------------------------------------------------------
 
 _TRIAD = ("kernel.py", "ops.py", "ref.py")
@@ -433,6 +524,7 @@ def run_lint(root: str, rel_dirs=DEFAULT_ROOTS) -> list:
             findings += lint_wall_clock(source, rel)
             findings += lint_wire_compat(source, rel)
             findings += lint_bare_retry(source, rel)
+            findings += lint_metric_cardinality(source, rel)
             if rel == HOT_PATH_FILE:
                 findings += lint_hot_path(source, rel)
         except SyntaxError as e:

@@ -216,11 +216,45 @@ class SearchAttribution:
     """One search's full decision record: every candidate's
     :class:`CandidateCost` plus what the policy chose (for a ranked
     policy, the head of the ranking).  Delivered to
-    ``SearchContext.attribution``."""
+    ``SearchContext.attribution``.
+
+    ``context`` captures the :class:`SearchContext` *inputs* as plain
+    data — the scalar fields plus, per candidate (aligned with
+    ``candidates``), its width, backlog entry, and service-rate readings
+    at decision time.  That makes a persisted record **replayable**: a
+    modified :class:`CostModel` can re-score the exact same decision
+    offline (:mod:`repro.obs.replay`) without the live tables."""
     chosen: object
     metric: int | str
     policy: str
     candidates: tuple
+    context: dict | None = None
+
+
+def capture_context(ctx: "SearchContext", scored: Sequence) -> dict:
+    """Freeze a search's inputs for replay: scalar context fields plus a
+    ``per_item`` list (one entry per scored candidate, in order) holding
+    each candidate's width, backlog entry, pooled service rate, and —
+    under class-resolved backlogs — per-class rates.  Only plain data
+    crosses: the capture survives JSON and rebuilds a working
+    :class:`SearchContext` offline."""
+    per_item = []
+    for s in scored:
+        item = s.cand.item
+        entry: dict = {"width": s.cand.width}
+        b = None
+        if ctx.backlog is not None:
+            b = ctx.backlog[item]
+            entry["backlog"] = dict(b) if isinstance(b, Mapping) else b
+        if ctx.service is not None:
+            entry["service"] = ctx.service(item)
+            if isinstance(b, Mapping):
+                entry["class_service"] = {c: ctx.service(item, c)
+                                          for c in b}
+        per_item.append(entry)
+    return {"metric": ctx.metric, "tokens": ctx.tokens,
+            "current": ctx.current, "origin": ctx.origin,
+            "per_item": per_item}
 
 
 def cost_terms(cost: CostModel, value: float, cand: Candidate,
@@ -527,7 +561,8 @@ class TraceTable(EMASearchMixin):
                                   terms=cost_terms(cost, s.value, s.cand,
                                                    ctx),
                                   tie=s.cand.tie)
-                    for s in scored)))
+                    for s in scored),
+                context=capture_context(ctx, scored)))
         return picked
 
 

@@ -1,4 +1,5 @@
-"""Telemetry plane: request spans, metric registry, decision attribution.
+"""Telemetry plane: request spans, metric registry, decision attribution,
+and the SLO control plane built on top of them.
 
 The paper's claim is that a lightweight latency manifest can *infer*
 performance and interference; this package makes those inferences —
@@ -12,7 +13,19 @@ and the placements acted on them — visible:
   (:class:`MetricRegistry`);
 * :mod:`repro.obs.attribution` — per-candidate, per-cost-model-term
   breakdown of every TraceTable search decision (:class:`DecisionLog`),
-  fed by the ``SearchContext.attribution`` hook.
+  fed by the ``SearchContext.attribution`` hook;
+* :mod:`repro.obs.timeseries` — bounded ring-buffer samples of every
+  registry series on the pump clock, with windowed rate/percentile
+  derivation (:class:`TimeSeriesStore`);
+* :mod:`repro.obs.slo` — multi-window burn-rate alerting over
+  TTFT/TPOT/availability objectives (:class:`SLOMonitor`,
+  :class:`Objective`, :class:`Alert`);
+* :mod:`repro.obs.server` — a stdlib HTTP endpoint serving
+  ``/metrics``, ``/timeseries``, ``/alerts``, ``/traces`` and
+  ``/debug/decisions`` over real TCP (:class:`ObsServer`);
+* :mod:`repro.obs.replay` — DecisionLog JSONL persistence plus a replay
+  harness that re-scores recorded decisions under a modified cost model
+  (:func:`dump_jsonl`, :func:`load_jsonl`, :func:`replay`).
 
 All of it is opt-in: every instrumented class defaults to the null
 tracer / no registry / no log, and the null-path decode overhead is
@@ -25,6 +38,11 @@ facade agrees on (old per-scale keys remain as aliases for one release).
 from .attribution import DecisionLog, DecisionRecord
 from .metrics import (BYTE_BUCKETS, LATENCY_BUCKETS, Counter, Gauge,
                       Histogram, MetricRegistry)
+from .replay import (ReplayReport, dump_jsonl, load_jsonl, parse_cost,
+                     record_to_json, replay, rescore)
+from .server import ObsServer
+from .slo import Alert, Objective, SLOMonitor
+from .timeseries import TimeSeriesStore
 from .trace import NULL_TRACER, NullTracer, SpanTracer
 
 #: Counter keys shared by ServeEngine.stats(), FleetGateway.stats(), and
@@ -37,4 +55,9 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricRegistry",
     "DecisionLog", "DecisionRecord",
     "NULL_TRACER", "NullTracer", "SpanTracer",
+    "TimeSeriesStore",
+    "Alert", "Objective", "SLOMonitor",
+    "ObsServer",
+    "ReplayReport", "dump_jsonl", "load_jsonl", "parse_cost",
+    "record_to_json", "replay", "rescore",
 ]

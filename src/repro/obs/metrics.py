@@ -127,6 +127,9 @@ class MetricRegistry:
 
     def __init__(self):
         self._families: dict[str, _Family] = {}
+        #: bumped whenever a new family or child appears — lets samplers
+        #: cache a flat child list and rescan only on growth
+        self.version = 0
 
     def _get(self, kind: str, name: str, help: str, labels: Mapping,
              **init):
@@ -145,6 +148,7 @@ class MetricRegistry:
         child = fam.children.get(key)
         if child is None:
             child = fam.children[key] = _KINDS[kind](**init)
+            self.version += 1
         return child
 
     def counter(self, name: str, help: str = "", **labels) -> Counter:

@@ -52,6 +52,9 @@ class NullTracer:
     def instant(self, name, trace=None, track=None, **args) -> None:
         pass
 
+    def set_tick(self, tick) -> None:
+        pass
+
     def complete(self, name, trace=None, track=None, *, ts=0.0, dur=0.0,
                  **args) -> None:
         pass
@@ -99,6 +102,16 @@ class SpanTracer:
         self.sample_rate = int(sample_rate)
         self.events: deque[dict] = deque(maxlen=cap)
         self._bind: dict = {}            # rid -> trace id (None: sampled out)
+        self.tick: int | None = None     # current pump tick (set_tick)
+
+    # -- logical clock -----------------------------------------------------
+    def set_tick(self, tick: int) -> None:
+        """Advance the tracer's pump-tick logical clock.  The owning
+        gateway calls this at the top of each pump; instants recorded
+        until the next call carry this tick, so they join time-series
+        samples (stamped with the same tick) on one clock even when a
+        chaos-delayed delivery skews their wall timestamps."""
+        self.tick = tick
 
     # -- trace identity ----------------------------------------------------
     def trace_for(self, rid) -> str | None:
@@ -139,7 +152,8 @@ class SpanTracer:
             return
         self.events.append({"name": name, "ph": "i", "ts": self.clock(),
                             "trace": trace or self.name,
-                            "track": track or self.name, "args": args})
+                            "track": track or self.name, "args": args,
+                            "tick": self.tick})
 
     def complete(self, name: str, trace: str | None = None,
                  track: str | None = None, *, ts: float, dur: float,
@@ -198,8 +212,13 @@ class SpanTracer:
         for e in events:
             pid = pids.setdefault(e["trace"], len(pids))
             tid = tids.setdefault(e["track"], len(tids))
+            args = e["args"]
+            if e.get("tick") is not None:
+                # pump tick rides along so the viewer shows the logical
+                # clock that time-series samples share
+                args = dict(args, pump_tick=e["tick"])
             ev = {"name": e["name"], "ph": e["ph"], "pid": pid, "tid": tid,
-                  "ts": round((e["ts"] - t0) * 1e6, 3), "args": e["args"]}
+                  "ts": round((e["ts"] - t0) * 1e6, 3), "args": args}
             if e["ph"] == "X":
                 ev["dur"] = round(e["dur"] * 1e6, 3)
             else:

@@ -88,6 +88,12 @@ class RegionGateway:
         self.obs_name = "region"
         self._m_ships = self._m_stay = None
         self._h_ship_bytes = self._h_ship_rtt = None
+        # SLO control plane (attach_slo / attach_timeseries), on the
+        # region's own pump-tick logical clock
+        self._pump_count = 0
+        self.slo = None
+        self._tss = None
+        self._tss_every = 1
 
     # -- observability -----------------------------------------------------
     def attach_obs(self, tracer=None, metrics=None,
@@ -123,6 +129,27 @@ class RegionGateway:
             if t is not None or m is not None:
                 gw.attach_obs(t, m, name=f"{self.obs_name}/f{i}")
 
+    def attach_slo(self, monitor) -> None:
+        """Attach an :class:`~repro.obs.SLOMonitor` fed region-level
+        signals: client TTFT in wall seconds (``"ttft"``) and in region
+        pump ticks (``"ttft_pumps"``), served/shed availability verdicts,
+        and per-ship WAN delivery verdicts (``"wan_delivery"`` — a
+        partitioned link burns this objective's budget until the window
+        of failed drains ages out) — evaluated once per region pump."""
+        self.slo = monitor
+        monitor.attach_obs(
+            self.tracer if self.tracer is not NULL_TRACER else None,
+            self.metrics, name=f"{self.obs_name}/slo")
+
+    def attach_timeseries(self, store, every: int = 1) -> None:
+        """Sample a :class:`~repro.obs.TimeSeriesStore` every ``every``
+        region pumps (the fleets' own series live in the same registry,
+        so one region-attached store captures all four scales)."""
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self._tss = store
+        self._tss_every = int(every)
+
     # -- ingress -----------------------------------------------------------
     def class_backlogs(self) -> list[dict[int, int]]:
         """Per-fleet class-resolved backlog — the region search prices
@@ -144,7 +171,8 @@ class RegionGateway:
         self._handles[req.rid] = req
         self._meta[req.rid] = {"fleet": d.fleet,
                                "req_class": int(d.req_class),
-                               "t_arrival": self.clock(), "ttft": None}
+                               "t_arrival": self.clock(), "ttft": None,
+                               "pump_arrival": self._pump_count}
         self._unharvested.add(req.rid)
         self.fleets[d.fleet].submit(req)
         return d
@@ -184,6 +212,8 @@ class RegionGateway:
             # degrade by parking it back on its source fleet, where it
             # drains slowly but is never lost
             self._delivery_failures += 1
+            if self.slo is not None:
+                self.slo.observe_ok("wan_delivery", False)
             self.fleets[src].adopt_session(sess)
             if self.tracer.enabled:
                 self.tracer.instant(
@@ -199,6 +229,8 @@ class RegionGateway:
             # retried it: same degradation as a failed delivery — the
             # pre-encode object is still in hand, park it on its source
             self._delivery_failures += 1
+            if self.slo is not None:
+                self.slo.observe_ok("wan_delivery", False)
             self.fleets[src].adopt_session(sess)
             if self.tracer.enabled:
                 self.tracer.instant(
@@ -221,6 +253,8 @@ class RegionGateway:
             self._meta[sess.req.rid]["fleet"] = dst
         self._wan_ships += 1
         self._wan_bytes += len(data)
+        if self.slo is not None:
+            self.slo.observe_ok("wan_delivery", True)
         if self.tracer.enabled:
             # the wire carried the session's trace context (v2's "trace"
             # key), so this span lands on the SAME timeline the request's
@@ -317,6 +351,9 @@ class RegionGateway:
         """One region iteration: age stale RTT rows, drain browned-out
         fleets, pump every fleet, harvest region-level observations.
         Returns sequences still active region-wide."""
+        self._pump_count += 1
+        if self.tracer.enabled:
+            self.tracer.set_tick(self._pump_count)
         # rows age BEFORE this pump's drain decisions read them: a link
         # whose last delivery predates a route flap must not price this
         # pump's WAN moves with its stale RTT
@@ -344,6 +381,8 @@ class RegionGateway:
                 self._shed_seen[f] = gw.shed_total
                 for req in list(gw.shed)[-new:]:
                     self._unharvested.discard(req.rid)
+                    if self.slo is not None:
+                        self.slo.observe_ok("availability", False)
         for rid in list(self._unharvested):
             mt = self._meta[rid]
             h = self._handles[rid]
@@ -363,6 +402,17 @@ class RegionGateway:
             # split is what absorbs the size differences)
             self.router.record_service(mt["fleet"], tok - t0,
                                        req_class=mt["req_class"])
+            if self.slo is not None:
+                if self.slo.wants("ttft"):
+                    self.slo.observe("ttft", mt["ttft"])
+                if self.slo.wants("ttft_pumps"):
+                    self.slo.observe("ttft_pumps", float(
+                        self._pump_count - mt["pump_arrival"]))
+                self.slo.observe_ok("availability", True)
+        if self._tss is not None and self._pump_count % self._tss_every == 0:
+            self._tss.sample(self._pump_count, self.clock())
+        if self.slo is not None:
+            self.slo.evaluate(self._pump_count, self.clock())
         return active
 
     def run_until_drained(self, max_steps: int = 10000) -> None:

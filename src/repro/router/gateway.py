@@ -176,6 +176,15 @@ class FleetGateway:
         self._m_served = self._m_shed = self._m_migrations = None
         self._h_ttft = self._h_queue_wait = None
         self._m_handoffs = self._h_handoff = self._h_handoff_bytes = None
+        # SLO control plane (attach_slo / attach_timeseries): both opt-in
+        self.slo = None
+        self._tss = None
+        self._tss_every = 1
+        self._g_drift: list | None = None       # per-replica drift gauges
+        self._g_quar: list | None = None        # per-replica quarantine state
+        # rid -> pump tick at submit: TTFT in PUMPS, the logical-clock
+        # twin of the wall TTFT (deterministic under a seeded chaos run)
+        self._arrival_pump: dict[int, int] = {}
 
     # -- observability -----------------------------------------------------
     def attach_obs(self, tracer=None, metrics=None,
@@ -223,6 +232,54 @@ class FleetGateway:
             m = metrics if e.metrics is None else None
             if t is not None or m is not None:
                 e.attach_obs(t, m, name=f"{self.obs_name}/r{i}")
+
+    def attach_slo(self, monitor) -> None:
+        """Attach an :class:`~repro.obs.SLOMonitor`: the pump feeds it
+        TTFT (wall seconds via a ``"ttft"`` objective, pump ticks via
+        ``"ttft_pumps"`` — the deterministic logical-clock twin), decode
+        TPOT (``"tpot"``), and served/shed verdicts (``"availability"``),
+        and evaluates it once per pump on the pump-tick clock."""
+        self.slo = monitor
+        monitor.attach_obs(
+            self.tracer if self.tracer is not NULL_TRACER else None,
+            self.metrics, name=f"{self.obs_name}/slo")
+
+    def attach_timeseries(self, store, every: int = 1) -> None:
+        """Attach a :class:`~repro.obs.TimeSeriesStore` sampled every
+        ``every`` pumps.  Also exports the interference detector's
+        Fig. 8 signal as per-replica gauges on the store's registry —
+        ``fleet_replica_drift_ratio`` and ``fleet_replica_quarantined``
+        (1.0 = detector- or heartbeat-quarantined) — refreshed right
+        before each sample so the rings carry the full trajectory."""
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self._tss = store
+        self._tss_every = int(every)
+        g = self.obs_name
+        self._g_drift = [store.registry.gauge(
+            "fleet_replica_drift_ratio",
+            "Interference detector fast/baseline latency ratio",
+            fleet=g, replica=r) for r in range(len(self.engines))]
+        self._g_quar = [store.registry.gauge(
+            "fleet_replica_quarantined",
+            "Replica quarantine state (detector or heartbeat)",
+            fleet=g, replica=r) for r in range(len(self.engines))]
+
+    def _sample_obs(self) -> None:
+        """End-of-pump SLO/time-series duty: refresh the detector
+        gauges, sample every registry series, evaluate burn rates."""
+        if self._tss is not None:
+            if self._g_drift is not None:
+                det = self.router.detector
+                for r, drift in enumerate(det.drifts()):
+                    self._g_drift[r].set(drift)
+                    self._g_quar[r].set(
+                        1.0 if (r in det.quarantined
+                                or r in self._hb_quarantined) else 0.0)
+            if self._pump_count % self._tss_every == 0:
+                self._tss.sample(self._pump_count, self.clock())
+        if self.slo is not None:
+            self.slo.evaluate(self._pump_count, self.clock())
 
     # -- ingress -----------------------------------------------------------
     def backlog(self) -> list[int]:
@@ -276,6 +333,9 @@ class FleetGateway:
         if len(self._handles) >= self.TTFT_CAP:      # evict oldest
             self._handles.pop(next(iter(self._handles)))
         self._handles[req.rid] = req
+        if len(self._arrival_pump) >= self.TTFT_CAP:
+            self._arrival_pump.pop(next(iter(self._arrival_pump)))
+        self._arrival_pump[req.rid] = self._pump_count
         d = self.router.route(len(req.prompt), req.max_new,
                               affinity=affinity, backlog=self.backlog(),
                               allowed=self._route_allowed())
@@ -329,6 +389,8 @@ class FleetGateway:
         self.shed_total += 1
         if self._m_shed is not None:
             self._m_shed.inc()
+        if self.slo is not None:
+            self.slo.observe_ok("availability", False)
         if self.tracer.enabled:
             self.tracer.instant("shed", self.tracer.trace_for(req.rid),
                                 self.obs_name, tenant=str(req.tenant))
@@ -744,6 +806,13 @@ class FleetGateway:
         self._ttfts[t.req.rid] = t.ttft
         if self._h_ttft is not None:
             self._h_ttft.observe(t.ttft)
+        if self.slo is not None:
+            if self.slo.wants("ttft"):
+                self.slo.observe("ttft", t.ttft)
+            p0 = self._arrival_pump.pop(t.req.rid, None)
+            if p0 is not None and self.slo.wants("ttft_pumps"):
+                self.slo.observe("ttft_pumps",
+                                 float(self._pump_count - p0))
         # the learning samples span prefill-start -> first token (the
         # engine stamps t_admit), NOT dispatch -> first token: the
         # engine-queue wait is what QueueAware's backlog term models, so
@@ -1037,14 +1106,20 @@ class FleetGateway:
         drain quarantined replicas, step every engine, harvest TTFTs.
         Returns the number of sequences still active fleet-wide."""
         self._pump_count += 1
+        if self.tracer.enabled:
+            self.tracer.set_tick(self._pump_count)
         self._apply_faults()
         self._check_heartbeats()
         self._drain_duplicates()
         self._retry_held()
         self._migrate_quarantined()
+        want_tpot = self.slo is not None and self.slo.wants("tpot")
         active = 0
         for e in self.engines:
-            active += e.step()
+            a = e.step()
+            active += a
+            if want_tpot and a and e.last_step_latency > 0:
+                self.slo.observe("tpot", e.last_step_latency)
         in_flight = []
         for t in self.tracked:
             self._harvest_ttft(t)
@@ -1062,9 +1137,12 @@ class FleetGateway:
                 self._snapshots.pop(t.req.rid, None)
                 if self._m_served is not None:
                     self._m_served.inc()
+                if self.slo is not None:
+                    self.slo.observe_ok("availability", True)
             else:
                 in_flight.append(t)
         self.tracked = in_flight
+        self._sample_obs()
         return active
 
     def run_until_drained(self, max_steps: int = 10000) -> None:

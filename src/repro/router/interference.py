@@ -127,3 +127,8 @@ class InterferenceDetector(EMASearchMixin):
         """fast / baseline; 1.0 = nominal, inf-safe for untrained."""
         b = self.baseline[replica]
         return float(self.fast[replica] / b) if b > 0 else 1.0
+
+    def drifts(self) -> list[float]:
+        """Every replica's drift ratio at once — the fleet-wide Fig. 8
+        signal a sampling loop exports as gauges each pump."""
+        return [self.drift(r) for r in range(len(self.baseline))]

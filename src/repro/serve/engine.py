@@ -190,6 +190,7 @@ class ServeEngine:
         self._m_served = self._m_tokens = None
         self._m_exports = self._m_imports = None
         self._h_prefill = self._h_step = self._h_prefill_chunk = None
+        self._g_util = self._g_queue = None
 
     # -- observability -----------------------------------------------------
     def attach_obs(self, tracer=None, metrics=None,
@@ -227,6 +228,14 @@ class ServeEngine:
                 "serve_prefill_chunk_seconds",
                 "Per-chunk prefill wall time (chunked admission)",
                 engine=e, role=self.role)
+            # point-in-time gauges refreshed each step so a sampling
+            # TimeSeriesStore sees the occupancy/backlog trajectory
+            self._g_util = metrics.gauge(
+                "serve_utilization",
+                "Fraction of batch slots occupied", engine=e)
+            self._g_queue = metrics.gauge(
+                "serve_queue_depth",
+                "Requests queued but not slotted", engine=e)
 
     def stats(self) -> dict:
         """Counter facade with the unified cross-scale key names
@@ -669,6 +678,9 @@ class ServeEngine:
         self._admit()
         self._advance_prefill()      # one chunk, timed on its own signal
         n_active = self.active_count()
+        if self._g_util is not None:
+            self._g_util.set(n_active / self.max_batch)
+            self._g_queue.set(float(self.pending()))
         if n_active == 0:
             return 0
         d = self.scheduler.schedule_decode(group=0)

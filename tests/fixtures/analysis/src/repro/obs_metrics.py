@@ -1,0 +1,25 @@
+"""metric-cardinality fixture: metric names/labels minted from
+per-request runtime data (flagged) vs an annotated intended site."""
+
+
+class Gateway:
+    def __init__(self, metrics, fleet):
+        self.metrics = metrics
+        self.fleet = fleet
+
+    def on_request(self, req):
+        # BAD: a new metric family per request id
+        c = self.metrics.counter(f"requests_{req.rid}_total",
+                                 "one family per request")
+        c.inc()
+        # BAD: a new child series per session id
+        g = self.metrics.gauge("session_tokens", "tokens in flight",
+                               session_id=str(req.session_id))
+        g.set(req.tokens)
+        # fine: a bounded dimension (replica index) as a plain variable
+        for r in range(2):
+            self.metrics.counter("served_total", "per replica",
+                                 fleet=self.fleet, replica=r).inc()
+        # fine when annotated: a deliberately bounded debug build
+        self.metrics.counter(  # analysis: allow-metric-cardinality(debug build, capped upstream)
+            f"debug_{req.phase}_total", "phase is a 3-value enum").inc()

@@ -30,8 +30,8 @@ from repro.analysis.jaxpr_audit import (audit_decode_fused,
                                         cache_leaf_names, donation_findings,
                                         jaxpr_findings)
 from repro.analysis.lint import (lint_bare_retry, lint_hot_path,
-                                 lint_wall_clock, lint_wire_compat,
-                                 run_lint)
+                                 lint_metric_cardinality, lint_wall_clock,
+                                 lint_wire_compat, run_lint)
 
 HERE = os.path.dirname(__file__)
 REPO_ROOT = os.path.abspath(os.path.join(HERE, ".."))
@@ -68,7 +68,7 @@ def test_fixture_report_covers_every_rule():
     rules = {f["rule"] for f in report["findings"]}
     assert rules == {"hot-path-host-sync", "unguarded-span",
                      "wall-clock-latency", "wire-compat", "kernel-triad",
-                     "bare-retry", "parse-error"}
+                     "bare-retry", "metric-cardinality", "parse-error"}
     assert report["counts"]["new"] == len(report["findings"])
     # the complete triad with a force_pallas kwarg stays finding-free
     assert not any("goodkernel" in f["path"] or "goodkernel" in f["message"]
@@ -171,6 +171,39 @@ def test_bare_retry_rule():
                 continue
         """)
     assert lint_bare_retry(allowed, "x.py") == []
+
+
+def test_metric_cardinality_rule():
+    bad = textwrap.dedent("""\
+        def attach(metrics, req):
+            metrics.counter(f"requests_{req.rid}_total", "per request")
+            metrics.gauge("tokens", "t", session_id=str(req.session_id))
+            metrics.histogram("lat_seconds", "l", rid=req.rid)
+            self.registry.counter("x_total", "x", key="a" + req.user)
+        """)
+    fs = lint_metric_cardinality(bad, "x.py")
+    assert [f.rule for f in fs] == ["metric-cardinality"] * 4
+    assert [f.line for f in fs] == [2, 3, 4, 5]
+    assert all(f.severity == "warning" for f in fs)
+    # bounded-dimension labels from plain variables are the normal idiom
+    ok = textwrap.dedent("""\
+        def attach(metrics, g):
+            for r in range(n):
+                metrics.gauge("drift_ratio", "d", fleet=g, replica=r)
+            metrics.counter("served_total", "s", fleet=g, state="firing")
+        """)
+    assert lint_metric_cardinality(ok, "x.py") == []
+    # only registry-ish receivers are in scope: a tracer instant may
+    # carry ids freely (spans are bounded deques)
+    tracer = 'tracer.counter = 1\nx.instant("n", rid=str(req.rid))\n'
+    assert lint_metric_cardinality(tracer, "x.py") == []
+    # the annotation escape hatch
+    allowed = textwrap.dedent("""\
+        def attach(metrics, req):
+            metrics.counter(  # analysis: allow-metric-cardinality(capped)
+                f"debug_{req.phase}_total", "phase is a 3-value enum")
+        """)
+    assert lint_metric_cardinality(allowed, "x.py") == []
 
 
 def test_wire_compat_rule():

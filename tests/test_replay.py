@@ -1,0 +1,202 @@
+"""Decision-replay regression tooling: JSONL persistence round-trips the
+DecisionLog exactly, an identity replay reproduces every recorded total
+and winner bit-for-bit (capture is faithful), and a modified cost model
+reports per-term deltas + flipped winners as a deterministic diff.
+
+The committed fixture is 60 routing decisions from the seeded fleet
+benchmark.  Regenerate after an intentional capture-format change with
+
+    PYTHONPATH=src python tests/test_replay.py --regen
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..")))
+
+from repro.core.tracetable import QueueAware, Sum  # noqa: E402
+from repro.obs import DecisionLog  # noqa: E402
+from repro.obs.replay import (dump_jsonl, load_jsonl, main,  # noqa: E402
+                              parse_cost, record_to_json, replay, rescore)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "decisions",
+                       "route_log.jsonl")
+
+
+def _fresh_log():
+    from benchmarks.fleet_routing import simulate
+
+    log = DecisionLog()
+    simulate("ptt", n_requests=60, seed=0, attribution=log)
+    return log
+
+
+def _records():
+    return load_jsonl(FIXTURE)
+
+
+def _identity_cost(rec):
+    """The cost model each recorded search actually ran under: route
+    searches (metric 0) score queue pressure in seconds-per-token, the
+    sticky re-place search (metric 1) in raw backlog tokens."""
+    if rec["context"]["metric"] == 0:
+        return parse_cost("queueaware")
+    return parse_cost("queueaware:value_per_token=false")
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+def test_fixture_matches_regenerated_log(tmp_path):
+    """The committed JSONL is byte-reproducible from the seeded benchmark
+    — drift here means capture or serialization changed shape and the
+    fixture needs a --regen (and downstream consumers a look)."""
+    log = _fresh_log()
+    out = tmp_path / "log.jsonl"
+    assert dump_jsonl(log, str(out)) == 60
+    assert out.read_text() == open(FIXTURE).read()
+
+
+def test_roundtrip_preserves_every_field(tmp_path):
+    log = _fresh_log()
+    out = tmp_path / "log.jsonl"
+    dump_jsonl(log, str(out))
+    loaded = load_jsonl(str(out))
+    assert len(loaded) == len(log.records)
+    for rec, got in zip(log.records, loaded):
+        want = json.loads(json.dumps(record_to_json(rec), sort_keys=True,
+                                     default=lambda o: o.item()))
+        assert got == want
+
+
+def test_fixture_shape():
+    recs = _records()
+    assert len(recs) == 60
+    assert {r["kind"] for r in recs} == {"route"}
+    metrics = sorted({r["context"]["metric"] for r in recs})
+    assert metrics == [0, 1]          # route searches + sticky re-places
+    for r in recs:
+        assert r["candidates"] and r["chosen"] is not None
+        per_item = r["context"]["per_item"]
+        assert len(per_item) == len(r["candidates"])
+        for c, pi in zip(r["candidates"], per_item):
+            # additivity survives the round trip
+            assert sum(c["terms"].values()) == pytest.approx(c["total"])
+            assert "backlog" in pi and "service" in pi
+
+
+# ---------------------------------------------------------------------------
+# identity replay: capture is faithful
+# ---------------------------------------------------------------------------
+
+def test_identity_rescore_reproduces_recorded_totals():
+    """Re-scoring under the cost model the search originally ran with
+    must reproduce every candidate total and every winner exactly — the
+    captured context really is sufficient to re-run the decision."""
+    for rec in _records():
+        out = rescore(rec, _identity_cost(rec))
+        assert not out["flipped"]
+        for c in out["candidates"]:
+            assert c["total"] == pytest.approx(c["old_total"], abs=1e-12)
+            assert c["terms"] == pytest.approx(c["old_terms"])
+
+
+def test_policy_overrides_are_not_flips():
+    """Sticky decisions where the live policy kept the session home
+    despite a cheaper candidate are overrides, never identity flips."""
+    recs = _records()
+    rep = replay(recs, parse_cost("queueaware"),
+                 kinds=["route"])
+    # identity cost for metric-0 records; metric-1 records rescored under
+    # the wrong units may flip, so count overrides on the full replay of
+    # the correctly-matched models instead:
+    overrides = 0
+    for rec in recs:
+        out = rescore(rec, _identity_cost(rec))
+        assert out["old_winner"] == out["new_winner"]
+        if out["policy_override"]:
+            assert rec["chosen"] != out["old_winner"]
+            overrides += 1
+    assert overrides == 5             # sticky stay-home decisions
+    assert rep.n == 60
+
+
+# ---------------------------------------------------------------------------
+# modified cost: the regression diff
+# ---------------------------------------------------------------------------
+
+def test_modified_cost_reports_flips_and_term_deltas():
+    recs = _records()
+    rep = replay(recs,
+                 parse_cost("queueaware+migration:fixed=0.5,per_token=0.001"))
+    assert rep.n == 60 and rep.kinds == {"route": 60}
+    assert len(rep.flips) == 8
+    assert rep.policy_overrides == 5
+    tt = rep.term_totals
+    assert set(tt) == {"QueueAware", "MigrationCost"}
+    assert tt["MigrationCost"]["old"] == 0.0          # not in the old model
+    assert tt["MigrationCost"]["delta"] == pytest.approx(47.376, abs=0.01)
+    assert tt["QueueAware"]["delta"] == pytest.approx(322.434, abs=0.01)
+    for fl in rep.flips:
+        rec = recs[fl["index"]]
+        items = {c["item"] for c in rec["candidates"]}
+        assert fl["old"] in items and fl["new"] in items and \
+            fl["old"] != fl["new"]
+    # report renders and serializes
+    txt = rep.render()
+    assert "replayed 60 decisions" in txt and "8 flipped winner(s)" in txt
+    assert "term MigrationCost" in txt
+    doc = json.loads(json.dumps(rep.to_json()))
+    assert doc["n"] == 60 and len(doc["flips"]) == 8
+
+
+def test_kind_filter():
+    recs = _records()
+    rep = replay(recs, parse_cost("queueaware"), kinds=["nope"])
+    assert rep.n == 0 and rep.flips == [] and rep.term_totals == {}
+
+
+# ---------------------------------------------------------------------------
+# cost-spec grammar + CLI
+# ---------------------------------------------------------------------------
+
+def test_parse_cost_grammar():
+    c = parse_cost("queueaware")
+    assert isinstance(c, QueueAware) and c.value_per_token
+    c = parse_cost("queueaware:value_per_token=false")
+    assert not c.value_per_token
+    c = parse_cost("queueaware+migration:fixed=0.05,per_token=2e-6")
+    assert isinstance(c, Sum) and len(c.parts) == 2
+    assert c.parts[1].fixed == pytest.approx(0.05)
+    assert c.parts[1].per_token == pytest.approx(2e-6)
+    with pytest.raises(ValueError):
+        parse_cost("nope")
+    with pytest.raises(ValueError):
+        parse_cost("")
+
+
+def test_cli_prints_report_and_writes_json(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    rc = main([FIXTURE, "--cost",
+               "queueaware+migration:fixed=0.5,per_token=0.001",
+               "--kind", "route", "--json", str(out)])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "replayed 60 decisions (route=60)" in text
+    assert "8 flipped winner(s), 5 policy override(s)" in text
+    doc = json.loads(out.read_text())
+    assert doc["n"] == 60 and doc["policy_overrides"] == 5
+
+
+# ---------------------------------------------------------------------------
+# --regen entrypoint
+# ---------------------------------------------------------------------------
+
+if __name__ == "__main__" and "--regen" in sys.argv:
+    n = dump_jsonl(_fresh_log(), FIXTURE)
+    print(f"wrote {n} records to {FIXTURE}")

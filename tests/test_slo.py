@@ -1,0 +1,432 @@
+"""SLO control plane acceptance: multi-window burn-rate math, the full
+alert lifecycle under seeded chaos (fire during a crash / partition,
+clear after recovery — deterministic ticks, not sleeps), the live HTTP
+endpoint diffed byte-for-byte against its in-process sources, and the
+trace-tick join between tracer instants and time-series samples.
+"""
+
+import json
+import os
+import sys
+import urllib.request
+
+import numpy as np
+import pytest
+
+import jax
+
+sys.path.insert(0, os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..")))
+
+from repro.chaos import ChaosTransport, FaultInjector  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.models import get_model  # noqa: E402
+from repro.obs import (Alert, DecisionLog, MetricRegistry,  # noqa: E402
+                       Objective, ObsServer, SLOMonitor, SpanTracer,
+                       TimeSeriesStore, record_to_json)
+from repro.region.gateway import RegionGateway  # noqa: E402
+from repro.region.transport import LoopbackTransport  # noqa: E402
+from repro.router.gateway import FleetGateway  # noqa: E402
+from repro.serve import Request, ServeEngine  # noqa: E402
+
+
+def _setup(arch="smollm-135m", seed=0):
+    cfg = get_config(arch, reduced=True)
+    m = get_model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(seed))
+    return cfg, m, params
+
+
+def _request(cfg, rng, rid, plen=8, max_new=6):
+    return Request(rid=rid, prompt=rng.integers(0, cfg.vocab, plen),
+                   max_new=max_new)
+
+
+def _clone(req):
+    return Request(rid=req.rid, prompt=req.prompt.copy(),
+                   max_new=req.max_new, extras=dict(req.extras))
+
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=10) as r:
+        return r.status, r.headers.get("Content-Type", ""), r.read()
+
+
+# ---------------------------------------------------------------------------
+# burn-rate math (no serving stack involved)
+# ---------------------------------------------------------------------------
+
+def test_objective_and_monitor_validation():
+    with pytest.raises(ValueError):
+        Objective("x", target=1.0)
+    with pytest.raises(ValueError):
+        Objective("x", target=0.0)
+    assert Objective("x", target=0.9).budget == pytest.approx(0.1)
+    with pytest.raises(ValueError):
+        SLOMonitor([])
+    with pytest.raises(ValueError):
+        SLOMonitor([Objective("x")], fast_window=5, slow_window=3)
+    with pytest.raises(ValueError):
+        SLOMonitor([Objective("x"), Objective("x")])
+
+
+def test_observe_needs_threshold_and_ignores_unknown():
+    mon = SLOMonitor([Objective("avail", target=0.9)])
+    with pytest.raises(ValueError):
+        mon.observe("avail", 1.0)          # bool-fed objective
+    mon.observe("nope", 1.0)               # unknown: silently ignored
+    mon.observe_ok("nope", False)
+    assert mon.counts("avail") == (0, 0)
+    assert mon.wants("avail") and not mon.wants("nope")
+
+
+def test_burn_rate_is_bad_fraction_over_budget():
+    mon = SLOMonitor([Objective("lat", target=0.9, threshold=1.0)],
+                     fast_window=4, slow_window=8)
+    # tick 1: 9 good, 1 bad -> bad fraction 0.1 == budget -> burn 1.0
+    for _ in range(9):
+        mon.observe("lat", 0.5)
+    mon.observe("lat", 2.0)
+    assert mon.evaluate(1) == []
+    fast, slow = mon.burn_rates("lat")
+    assert fast == pytest.approx(1.0) and slow == pytest.approx(1.0)
+    # tick 2: 5 more bad -> window burn well above any sane threshold
+    for _ in range(5):
+        mon.observe("lat", 2.0)
+    mon.evaluate(2)
+    fast, _ = mon.burn_rates("lat")
+    assert fast == pytest.approx(((6 / 15) / 0.1))
+
+
+def test_empty_window_burns_zero():
+    mon = SLOMonitor([Objective("a", target=0.9)], fast_window=2,
+                     slow_window=4)
+    assert mon.burn_rates("a") == (0.0, 0.0)     # never evaluated
+    mon.observe_ok("a", False)
+    mon.evaluate(1)
+    assert mon.burn_rates("a")[0] > 0
+    for t in range(2, 5):
+        mon.evaluate(t)                          # no traffic: fast ages out
+    fast, slow = mon.burn_rates("a")
+    assert fast == 0.0 and slow > 0              # slow still remembers
+    for t in range(5, 9):
+        mon.evaluate(t)
+    assert mon.burn_rates("a") == (0.0, 0.0)     # now both aged out
+
+
+def test_multiwindow_fire_and_clear_by_aging():
+    """Fast+slow must both exceed the threshold to fire; the clear needs
+    only the fast window to recover (here: by aging out, no new events)."""
+    mon = SLOMonitor([Objective("a", target=0.9)], fast_window=2,
+                     slow_window=6, burn_threshold=2.0)
+    mon.observe_ok("a", False)
+    out = mon.evaluate(1)
+    assert [a.state for a in out] == ["firing"]
+    assert isinstance(out[0], Alert) and out[0].objective == "a"
+    assert out[0].tick == 1 and out[0].burn_fast > 2.0
+    assert mon.evaluate(2) == []                 # still firing: no repeat
+    assert "a" in mon.active
+    cleared = None
+    for t in range(3, 10):
+        got = mon.evaluate(t)
+        if got:
+            cleared = got[0]
+            break
+    assert cleared is not None and cleared.state == "cleared"
+    assert cleared.tick == 3                     # fast window aged out
+    assert mon.active == {}
+    aj = mon.alerts_json()
+    assert [a["state"] for a in aj["history"]] == ["firing", "cleared"]
+    assert aj["active"] == []
+    assert aj["fast_window"] == 2 and aj["burn_threshold"] == 2.0
+
+
+def test_slow_window_gates_noise():
+    """One bad burst that the slow window dilutes must NOT fire — the
+    multi-window shape exists to suppress exactly this page."""
+    mon = SLOMonitor([Objective("a", target=0.9)], fast_window=2,
+                     slow_window=8, burn_threshold=1.5)
+    for t in range(1, 7):                        # 6 ticks of good traffic
+        for _ in range(10):
+            mon.observe_ok("a", True)
+        mon.evaluate(t)
+    for _ in range(4):                           # short 100%-bad burst
+        mon.observe_ok("a", False)
+    mon.evaluate(7)
+    fast, slow = mon.burn_rates("a")
+    assert fast > 1.5 > slow                     # fast alone is not enough
+    assert mon.active == {}
+
+
+def test_attach_obs_counts_and_instants():
+    reg = MetricRegistry()
+    tr = SpanTracer("t")
+    mon = SLOMonitor([Objective("a", target=0.9)], fast_window=2,
+                     slow_window=4, burn_threshold=2.0)
+    mon.attach_obs(tr, reg, name="fleet0/slo")
+    mon.observe_ok("a", False)
+    tr.set_tick(1)
+    mon.evaluate(1)
+    for t in range(2, 6):
+        mon.evaluate(t)
+    txt = reg.prometheus_text()
+    assert ('slo_alerts_total{monitor="fleet0/slo",objective="a",'
+            'state="firing"} 1') in txt
+    assert ('slo_alerts_total{monitor="fleet0/slo",objective="a",'
+            'state="cleared"} 1') in txt
+    inst = [e for e in tr.events if e["ph"] == "i"]
+    assert [e["name"] for e in inst] == ["slo-firing", "slo-cleared"]
+    assert all(e["track"] == "fleet0/slo" for e in inst)
+    assert inst[0]["args"]["tick"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the headline lifecycle: crash fires a TTFT-burn alert, recovery clears it
+# ---------------------------------------------------------------------------
+
+def test_crash_fires_ttft_burn_alert_then_clears():
+    """A seeded replica crash destroys in-flight prefill work; the
+    resubmitted requests' first tokens arrive pumps late, the ttft_pumps
+    burn rate blows through both windows, and the alert fires — then
+    clears once the bad events age out of the fast window.  Every tick is
+    deterministic, and the lifecycle is visible three ways at once: the
+    Alert records (served over real TCP), the tracer's SLO track, and the
+    slo_alerts_total counters."""
+    cfg, m, params = _setup()
+    rng = np.random.default_rng(5)
+    reqs = [_request(cfg, rng, rid) for rid in range(4)]
+
+    inj = FaultInjector(0).crash(1, at_step=1, restart_at=8)
+    gw = FleetGateway([ServeEngine(m, params, max_batch=4, max_seq=48)
+                       for _ in range(2)],
+                      transport=LoopbackTransport(), injector=inj,
+                      heartbeat_timeout=2.0)
+    reg = MetricRegistry()
+    tr = SpanTracer("fleet")
+    gw.attach_obs(tr, reg, name="fleet0")
+    mon = SLOMonitor([Objective("ttft_pumps", target=0.75, threshold=2.0)],
+                     fast_window=5, slow_window=15, burn_threshold=1.5)
+    gw.attach_slo(mon)
+    for r in reqs:
+        gw.submit(_clone(r))
+    for _ in range(14):
+        gw.pump()
+
+    # -- lifecycle: fire at the late first tokens, clear by window aging
+    states = [(a.state, a.tick) for a in mon.alerts]
+    assert states == [("firing", 3), ("cleared", 8)]
+    assert mon.active == {}
+    good, bad = mon.counts("ttft_pumps")
+    assert (good, bad) == (2, 2)        # replica 0's ttfts on time, 1's late
+    firing = mon.alerts[0]
+    assert firing.burn_fast > 1.5 and firing.burn_slow > 1.5
+
+    # -- the same lifecycle over a real TCP socket
+    with ObsServer(registry=reg, slo=mon, tracer=tr) as srv:
+        status, ctype, body = _get(srv.url + "/alerts")
+        assert status == 200 and ctype == "application/json"
+        assert json.loads(body) == json.loads(
+            json.dumps(mon.alerts_json(), sort_keys=True))
+
+    # -- tracer SLO track carries the transitions with their ticks
+    slo_inst = [e for e in tr.events
+                if e["ph"] == "i" and e["track"] == "fleet0/slo"]
+    assert [(e["name"], e["args"]["tick"]) for e in slo_inst] == [
+        ("slo-firing", 3), ("slo-cleared", 8)]
+
+    # -- counters
+    txt = reg.prometheus_text()
+    assert ('slo_alerts_total{monitor="fleet0/slo",objective="ttft_pumps",'
+            'state="firing"} 1') in txt
+    assert ('slo_alerts_total{monitor="fleet0/slo",objective="ttft_pumps",'
+            'state="cleared"} 1') in txt
+
+    # -- and the crash victims still finish (recovery, not loss)
+    gw.run_until_drained(400)
+    for r in reqs:
+        assert gw.handle(r.rid).done
+
+
+def test_partition_fires_wan_delivery_alert_then_clears():
+    """A region draining a browned-out fleet into a partitioned WAN link
+    fails every ship; wan_delivery burn fires, parked sessions re-drain
+    each pump until the partition heals, then the alert clears and the
+    sessions actually land."""
+    cfg, m, params = _setup()
+    rng = np.random.default_rng(4)
+    reqs = [_request(cfg, rng, rid, plen=7, max_new=40) for rid in range(3)]
+
+    inj = FaultInjector(3).partition(0, 1, start=0, until=12)
+    transport = ChaosTransport(LoopbackTransport(), inj)
+    fleets = [FleetGateway([ServeEngine(m, params, max_batch=4, max_seq=64)
+                            for _ in range(2)]) for _ in range(2)]
+    region = RegionGateway(fleets, transport=transport)
+    mon = SLOMonitor([Objective("wan_delivery", target=0.9)],
+                     fast_window=4, slow_window=12, burn_threshold=2.0)
+    region.attach_slo(mon)
+    for r in reqs:
+        region.submit(_clone(r), origin=0)
+    for _ in range(2):
+        region.pump()
+        inj.advance()                 # region pumps don't own the fault clock
+    region.brownout(0)
+    for _ in range(28):
+        region.pump()
+        inj.advance()
+
+    states = [(a.state, a.tick) for a in mon.alerts]
+    assert states == [("firing", 3), ("cleared", 16)]
+    assert mon.active == {}
+    good, bad = mon.counts("wan_delivery")
+    assert bad >= 10 and good >= 1    # failed all through the partition,
+    st = region.stats()               # then the parked sessions landed
+    assert st["delivery_failures"] >= 10 and st["wan_ships"] >= 1
+    region.run_until_drained(600)
+    for r in reqs:
+        assert region.request(r.rid).done
+
+
+# ---------------------------------------------------------------------------
+# live endpoint: byte-diff against the in-process sources
+# ---------------------------------------------------------------------------
+
+def test_server_serves_every_endpoint_over_tcp():
+    from benchmarks.fleet_routing import simulate
+
+    reg = MetricRegistry()
+    reg.counter("demo_total", "d", fleet="g0").inc(3)
+    reg.histogram("demo_seconds", "d", fleet="g0").observe(0.004)
+    tss = TimeSeriesStore(reg, cap=8)
+    tss.sample(1, 0.5)
+    tr = SpanTracer("srv")
+    tr.set_tick(2)
+    tr.instant("hello", None, "main", k=1)
+    mon = SLOMonitor([Objective("a", target=0.9)], fast_window=2,
+                     slow_window=4)
+    mon.observe_ok("a", False)
+    mon.evaluate(1)
+    log = DecisionLog()
+    simulate("ptt", n_requests=20, seed=0, attribution=log)
+    assert len(log) > 0
+
+    with ObsServer(registry=reg, timeseries=tss, slo=mon, tracer=tr,
+                   decisions=log) as srv:
+        # /metrics is the prometheus exposition, byte for byte
+        status, ctype, body = _get(srv.url + "/metrics")
+        assert status == 200
+        assert ctype.startswith("text/plain")
+        assert body.decode() == reg.prometheus_text()
+
+        # JSON endpoints mirror their in-process sources exactly
+        for path, src in [("/timeseries", tss.export()),
+                          ("/alerts", mon.alerts_json()),
+                          ("/traces", tr.chrome_trace())]:
+            status, ctype, body = _get(srv.url + path)
+            assert status == 200 and ctype == "application/json"
+            assert json.loads(body) == json.loads(
+                json.dumps(src, sort_keys=True))
+
+        # /debug/decisions mirrors the DecisionLog, with filters
+        status, _, body = _get(srv.url + "/debug/decisions")
+        doc = json.loads(body)
+        assert doc["count"] == len(log)
+        want = json.loads(json.dumps(
+            [record_to_json(r) for r in log.records], sort_keys=True,
+            default=lambda o: o.item()))
+        assert doc["records"] == want
+        _, _, body = _get(srv.url + "/debug/decisions?kind=route&n=3")
+        doc3 = json.loads(body)
+        assert doc3["count"] == 3 and doc3["records"] == want[-3:]
+        _, _, body = _get(srv.url + "/debug/decisions?kind=nope")
+        assert json.loads(body)["count"] == 0
+
+        # index lists everything; unknown paths 404 with the same list
+        _, _, body = _get(srv.url + "/")
+        assert json.loads(body)["endpoints"] == [
+            "/metrics", "/timeseries", "/alerts", "/traces",
+            "/debug/decisions"]
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/nope")
+        assert ei.value.code == 404
+        assert json.loads(ei.value.read())["endpoints"][0] == "/metrics"
+    # after stop() the socket is really gone
+    with pytest.raises(Exception):
+        _get(srv.url + "/metrics")
+
+
+def test_server_404s_missing_collaborators():
+    reg = MetricRegistry()
+    with ObsServer(registry=reg) as srv:
+        status, _, _ = _get(srv.url + "/metrics")
+        assert status == 200
+        for path in ("/timeseries", "/alerts", "/traces",
+                     "/debug/decisions"):
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _get(srv.url + path)
+            assert ei.value.code == 404
+
+
+def test_server_rejects_double_start():
+    srv = ObsServer(registry=MetricRegistry()).start()
+    try:
+        with pytest.raises(RuntimeError):
+            srv.start()
+    finally:
+        srv.stop()
+    srv.stop()                          # idempotent
+
+
+# ---------------------------------------------------------------------------
+# trace ticks: instants join time-series samples on the pump clock
+# ---------------------------------------------------------------------------
+
+def test_instants_carry_pump_tick_joining_timeseries():
+    """Chaos-delayed delivery skews wall timestamps, but every instant a
+    gateway emits carries the monotonic pump tick it happened on — the
+    same tick the TimeSeriesStore stamps its samples with, so the two
+    artifacts join on one logical clock regardless of wall time."""
+    cfg, m, params = _setup()
+    rng = np.random.default_rng(5)
+
+    inj = FaultInjector(0).crash(1, at_step=1, restart_at=8)
+    gw = FleetGateway([ServeEngine(m, params, max_batch=4, max_seq=48)
+                       for _ in range(2)],
+                      transport=LoopbackTransport(), injector=inj,
+                      heartbeat_timeout=2.0)
+    reg = MetricRegistry()
+    tr = SpanTracer("fleet")
+    gw.attach_obs(tr, reg, name="fleet0")
+    tss = TimeSeriesStore(reg, cap=64)
+    gw.attach_timeseries(tss)
+    for rid in range(4):
+        gw.submit(_request(cfg, rng, rid))
+    for _ in range(10):
+        gw.pump()
+    gw.run_until_drained(400)
+
+    inst = [e for e in tr.events if e["ph"] == "i"]
+    assert inst, "expected instants (admit/crash/resubmit) under chaos"
+    # every instant emitted during a pump carries that pump's tick;
+    # submit-time instants (admit) precede pump 1 and carry None
+    ticks = [e["tick"] for e in inst if e["tick"] is not None]
+    assert ticks and ticks == sorted(ticks)       # monotonic pump clock
+    sampled = {p[0] for p in tss.points("fleet_replica_quarantined",
+                                        fleet="fleet0", replica=1)}
+    assert set(ticks) <= sampled                  # every instant joins a
+    #                                               time-series sample row
+    # chrome export surfaces the tick as args.pump_tick on instants only
+    ev = [e for e in tr.chrome_trace()["traceEvents"]
+          if e["ph"] == "i" and "pump_tick" in e.get("args", {})]
+    assert [e["args"]["pump_tick"] for e in ev] == ticks
+
+    # submit-time admits precede pump 1 and carry no tick; every finish
+    # happens inside a pump and carries its tick — the tick, not the
+    # chaos-skewed wall ts, says which pump a request really ended on
+    admits = [e for e in inst if e["name"] == "admit"]
+    assert admits and all(e["tick"] is None for e in admits)
+    finishes = [e for e in inst if e["name"] == "finish"]
+    assert finishes and all(e["tick"] is not None for e in finishes)
+    # the crash victims' finishes land pumps after the survivors' — the
+    # tick gap is the recovery cost, legible straight off the trace
+    assert min(e["tick"] for e in finishes) < max(e["tick"]
+                                                  for e in finishes)

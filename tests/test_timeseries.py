@@ -1,0 +1,237 @@
+"""TimeSeriesStore: ring-buffer sampling, windowed queries, derivation.
+
+The property under test is that a bounded ring derives the same answers a
+brute-force unbounded history would give over the retained window: rates
+are differences of cumulative counters, windowed percentiles are
+differences of per-bucket tallies (each a monotonic counter), and
+wraparound loses exactly the oldest points and nothing else.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                  # pragma: no cover
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.obs import LATENCY_BUCKETS, MetricRegistry, TimeSeriesStore
+
+
+def _store(cap=8):
+    reg = MetricRegistry()
+    return reg, TimeSeriesStore(reg, cap=cap)
+
+
+# ---------------------------------------------------------------------------
+# sampling + ring mechanics
+# ---------------------------------------------------------------------------
+
+def test_cap_validation_and_counters():
+    reg = MetricRegistry()
+    with pytest.raises(ValueError):
+        TimeSeriesStore(reg, cap=1)
+    tss = TimeSeriesStore(reg, cap=2)
+    assert tss.samples == 0
+    assert tss.sample(0) == 0            # empty registry: nothing to write
+    assert tss.samples == 1
+
+
+def test_counter_gauge_histogram_points():
+    reg, tss = _store()
+    c = reg.counter("c_total", "c", fleet="g0")
+    g = reg.gauge("g_now", "g", fleet="g0")
+    h = reg.histogram("h_seconds", "h", fleet="g0")
+    c.inc(3)
+    g.set(1.5)
+    h.observe(0.002)
+    wrote = tss.sample(1, 10.0)
+    assert wrote == 3
+    assert tss.points("c_total") == [(1, 10.0, 3.0)]
+    assert tss.points("g_now") == [(1, 10.0, 1.5)]
+    (pt,) = tss.points("h_seconds")
+    tick, now, count, total, counts = pt
+    assert (tick, now, count) == (1, 10.0, 1)
+    assert total == pytest.approx(0.002)
+    # per-bucket tallies (+Inf overflow last): exactly the first bound
+    # covering 0.002 tallied the observation
+    covering = min(b for b in LATENCY_BUCKETS if b >= 0.002)
+    assert counts == tuple([1 if b == covering else 0
+                            for b in LATENCY_BUCKETS] + [0])
+
+
+def test_series_appear_lazily_and_labels_resolve():
+    reg, tss = _store()
+    reg.counter("c_total", "c", fleet="g0")
+    tss.sample(1)
+    reg.counter("c_total", "c", fleet="g1")      # second child appears later
+    tss.sample(2)
+    assert tss.names() == ["c_total"]
+    assert len(tss.points("c_total", fleet="g0")) == 2
+    assert len(tss.points("c_total", fleet="g1")) == 1
+    with pytest.raises(KeyError):                # ambiguous without labels
+        tss.points("c_total")
+    with pytest.raises(KeyError):
+        tss.points("nope")
+
+
+def test_label_free_lookup_resolves_single_child():
+    reg, tss = _store()
+    c = reg.counter("c_total", "c", fleet="g0")
+    c.inc()
+    tss.sample(1)
+    assert tss.points("c_total") == [(1, 0.0, 1.0)]
+
+
+@settings(max_examples=30)
+@given(n=st.integers(min_value=1, max_value=40),
+       cap=st.integers(min_value=2, max_value=12))
+def test_ring_wraparound_keeps_exactly_the_newest(n, cap):
+    """Brute-force model: after n samples a cap-bounded ring holds the
+    last min(n, cap) points, oldest first, values intact."""
+    reg = MetricRegistry()
+    tss = TimeSeriesStore(reg, cap=cap)
+    c = reg.counter("c_total", "c")
+    full = []
+    for t in range(n):
+        c.inc(t + 1)                      # distinct cumulative values
+        full.append((t, float(t), float(c.value)))
+        tss.sample(t, float(t))
+    assert tss.points("c_total") == full[-cap:]
+
+
+@settings(max_examples=30)
+@given(n=st.integers(min_value=2, max_value=30),
+       window=st.integers(min_value=1, max_value=35))
+def test_windowed_query_matches_bruteforce(n, window):
+    reg = MetricRegistry()
+    tss = TimeSeriesStore(reg, cap=64)
+    c = reg.counter("c_total", "c")
+    full = []
+    for t in range(n):
+        c.inc()
+        full.append((t, float(t), float(c.value)))
+        tss.sample(t, float(t))
+    lo = full[-1][0] - window
+    assert (tss.window("c_total", since_tick=lo)
+            == [p for p in full if p[0] >= lo])
+    assert tss.window("c_total", last=window) == full[-window:]
+
+
+# ---------------------------------------------------------------------------
+# derivation: rate + windowed percentile
+# ---------------------------------------------------------------------------
+
+def test_rate_per_tick_and_per_second():
+    reg, tss = _store(cap=16)
+    c = reg.counter("c_total", "c")
+    for t in range(5):
+        c.inc(4)
+        tss.sample(t, t * 0.5)           # 2 ticks per wall second
+    assert tss.rate("c_total") == pytest.approx(4.0)
+    assert tss.rate("c_total", per="second") == pytest.approx(8.0)
+    assert tss.rate("c_total", window=2) == pytest.approx(4.0)
+
+
+def test_rate_degenerate_cases():
+    reg, tss = _store()
+    c = reg.counter("c_total", "c")
+    c.inc()
+    tss.sample(1)
+    assert tss.rate("c_total") == 0.0     # one point: no interval
+    tss.sample(1)                         # same tick twice: dt == 0
+    assert tss.rate("c_total") == 0.0
+
+
+def test_histogram_rate_is_event_rate():
+    reg, tss = _store(cap=16)
+    h = reg.histogram("h_seconds", "h")
+    for t in range(4):
+        h.observe(0.001)
+        h.observe(0.001)
+        tss.sample(t)
+    assert tss.rate("h_seconds") == pytest.approx(2.0)
+
+
+def test_percentile_requires_histogram():
+    reg, tss = _store()
+    reg.counter("c_total", "c")
+    tss.sample(0)
+    with pytest.raises(TypeError):
+        tss.percentile("c_total", 50)
+
+
+def test_windowed_percentile_isolates_the_window():
+    """Old fast observations must not pollute a window that saw only
+    slow ones — the cumulative-bucket difference recovers the window's
+    own distribution from a lifetime histogram."""
+    reg, tss = _store(cap=64)
+    h = reg.histogram("h_seconds", "h")
+    for t in range(10):                   # ticks 0..9: all fast (1 ms)
+        h.observe(0.001)
+        tss.sample(t)
+    for t in range(10, 14):               # ticks 10..13: all slow (1 s)
+        h.observe(1.0)
+        tss.sample(t)
+    assert tss.percentile("h_seconds", 50) <= 0.005   # lifetime: fast wins
+    assert tss.percentile("h_seconds", 50, window=3) == pytest.approx(1.0)
+    assert tss.percentile("h_seconds", 99, window=3) == pytest.approx(1.0)
+
+
+def test_percentile_empty_window_is_zero():
+    reg, tss = _store(cap=64)
+    h = reg.histogram("h_seconds", "h")
+    h.observe(0.01)
+    for t in range(8):
+        tss.sample(t)                     # no new events after tick 0
+    assert tss.percentile("h_seconds", 99, window=3) == 0.0
+
+
+@settings(max_examples=20)
+@given(obs=st.lists(st.floats(min_value=1e-4, max_value=5.0),
+                    min_size=1, max_size=30),
+       window=st.integers(min_value=1, max_value=8))
+def test_windowed_percentile_matches_bruteforce(obs, window):
+    """One observation per tick: the windowed p100 equals the max bucket
+    bound covering the window's own observations (bucket resolution)."""
+    reg = MetricRegistry()
+    tss = TimeSeriesStore(reg, cap=64)
+    h = reg.histogram("h_seconds", "h")
+    for t, v in enumerate(obs):
+        h.observe(v)
+        tss.sample(t)
+    lo = len(obs) - 1 - window
+    in_window = [v for t, v in enumerate(obs) if t >= lo][1:] or obs[-1:]
+
+    def bucketize(v):
+        for b in LATENCY_BUCKETS:
+            if v <= b:
+                return b
+        return LATENCY_BUCKETS[-1]
+
+    assert (tss.percentile("h_seconds", 100, window=window)
+            == bucketize(max(in_window)))
+
+
+# ---------------------------------------------------------------------------
+# export
+# ---------------------------------------------------------------------------
+
+def test_export_roundtrips_to_json():
+    import json
+
+    reg, tss = _store(cap=4)
+    c = reg.counter("c_total", "c", fleet="g0")
+    h = reg.histogram("h_seconds", "h", fleet="g0")
+    for t in range(6):
+        c.inc()
+        h.observe(0.001 * (t + 1))
+        tss.sample(t, float(t))
+    doc = json.loads(json.dumps(tss.export()))
+    assert doc["cap"] == 4 and doc["samples"] == 6
+    by_name = {s["name"]: s for s in doc["series"]}
+    assert by_name["c_total"]["labels"] == {"fleet": "g0"}
+    assert len(by_name["c_total"]["points"]) == 4          # ring-capped
+    hist = by_name["h_seconds"]
+    assert hist["buckets"] == list(LATENCY_BUCKETS)
+    tick, now, count, total, counts = hist["points"][-1]
+    assert count == 6 and len(counts) == len(LATENCY_BUCKETS) + 1
